@@ -1,0 +1,54 @@
+"""§Roofline: three-term roofline table from dry-run JSON records.
+
+Reads the per-cell records produced by ``python -m repro.launch.dryrun
+--out results.json`` and emits the assignment's table: compute / memory /
+collective seconds per step, dominant term, MODEL_FLOPS, useful-compute
+ratio, and roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.analysis import roofline
+from repro.configs import SHAPE_BY_NAME, get_config
+
+DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "results", "dryrun_16x16.json")
+
+
+def run(path: str = "") -> list:
+    path = path or DEFAULT_JSON
+    if not os.path.exists(path):
+        print(f"# no dry-run records at {path}; run "
+              f"`python -m repro.launch.dryrun --out {path}` first")
+        return []
+    with open(path) as f:
+        records = json.load(f)
+    rows = []
+    print("arch,shape,mesh,dominant,t_compute_s,t_memory_s,"
+          "t_collective_s,bound_s,model_flops,useful_ratio,roofline_frac,"
+          "mem_GiB")
+    for rec in records:
+        if rec.get("status") != "ok":
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPE_BY_NAME[rec["shape"]]
+        t = roofline.roofline_terms(rec, cfg, shape)
+        mem = (rec["memory"]["device_total_bytes"] or 0) / 2**30
+        rows.append((rec, t))
+        print(f"{rec['arch']},{rec['shape']},{rec['mesh']},{t['dominant']},"
+              f"{t['t_compute_s']:.4f},{t['t_memory_s']:.4f},"
+              f"{t['t_collective_s']:.4f},{t['bound_s']:.4f},"
+              f"{t['model_flops']:.3e},{t['useful_ratio']:.3f},"
+              f"{t['roofline_frac']:.4f},{mem:.2f}")
+    return rows
+
+
+def main():
+    run(sys.argv[1] if len(sys.argv) > 1 else "")
+
+
+if __name__ == "__main__":
+    main()

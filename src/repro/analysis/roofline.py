@@ -1,0 +1,190 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the assignment:
+
+  compute    = HLO_FLOPs          / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes_accessed / (chips * HBM_BW)
+  collective = collective_bytes   / (chips * ICI_BW)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are parsed from the optimized HLO text (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute operand sizes).
+
+MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE) gives the useful-compute
+ratio that flags remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (assignment: ~50 GB/s/link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,512,3584]{2,1,0}  or  f32[128]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of output-shape bytes of every collective op, by kind.
+
+    Uses the op's result shape (per-shard) — the data each device moves in
+    one invocation — matching the per-chip link-bandwidth denominator.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-shape = op-name(...) ; skip fusions referencing collectives
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\(?[^=]*?\)?) "
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        shapes = _SHAPE_RE.finditer(m.group(1))
+        total = sum(_shape_bytes(x) for x in shapes)
+        out[kind] += total
+    return out
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6 * N * D (train) / 2 * N * D (inference) with N = *matmul-
+    participating* active params (token-embedding gathers do no FLOPs) and
+    D = tokens/step."""
+    n = matmul_param_count(cfg)
+    if cfg.family == "moe":
+        n = n - _routed_inactive(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * (
+            cfg.max_decode_len if cfg.is_encoder_decoder else shape.seq_len)
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        if cfg.is_encoder_decoder:
+            # prefill = encoder pass (enc params x enc tokens) + 1 dec token
+            enc = _subtree_count(cfg, "enc")
+            return 2.0 * shape.global_batch * (
+                enc * cfg.encoder_seq + (n - enc))
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def param_count(cfg) -> int:
+    import jax
+    from ..models import encdec, lm
+    model = encdec if cfg.is_encoder_decoder else lm
+    specs = model.param_specs(cfg)
+    total = 0
+    for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: hasattr(x, "shape")):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+def matmul_param_count(cfg) -> int:
+    """Params that participate in per-token matmuls (embedding gathers and
+    decoder-side caches excluded)."""
+    import jax
+    from ..models import encdec, lm
+    model = encdec if cfg.is_encoder_decoder else lm
+    specs = model.param_specs(cfg)
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: hasattr(x, "shape"))[0]:
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if "/tok" in keys or keys.endswith("pos") or "embed/" in keys:
+            continue
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+def _subtree_count(cfg, sub: str) -> int:
+    import jax
+    from ..models import encdec
+    specs = encdec.param_specs(cfg)[sub]
+    return sum(int(np_prod(s.shape)) for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: hasattr(x, "shape")))
+
+
+def np_prod(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _routed_inactive(cfg) -> int:
+    d, f, e, k = cfg.d_model, cfg.moe_d_ff, cfg.num_experts, cfg.top_k
+    n_moe_layers = cfg.num_layers - cfg.first_dense_layers
+    return n_moe_layers * (e - k) * 3 * d * f
+
+
+def active_param_count(cfg) -> int:
+    """MoE: only top-k routed experts (+ shared) count as active."""
+    total = param_count(cfg)
+    if cfg.family != "moe":
+        return total
+    return total - _routed_inactive(cfg)
+
+
+def roofline_terms(record: dict, cfg=None, shape=None) -> dict:
+    """Three roofline terms (seconds) from one dry-run record.
+
+    The memory term uses ``bytes_min`` (dot/gather/collective traffic —
+    assumes producer-consumer fusion of elementwise chains, which the TPU
+    backend performs but the CPU-backend HLO dump does not); the
+    all-ops upper bound is reported as ``t_memory_upper_s``.
+    """
+    chips = record["devices"]
+    flops = record["cost"]["flops"] or 0.0
+    bytes_up = record["cost"]["bytes_accessed"] or 0.0
+    bytes_min = record["cost"].get("bytes_min", bytes_up) or bytes_up
+    coll = sum(record["collectives"].values())
+    # cost_analysis flops are per-program (per-device under SPMD)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_min / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    out = {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_upper_s": bytes_up / HBM_BW,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape, record["kind"])
+        out["model_flops"] = mf
+        out["useful_ratio"] = mf / (flops * chips) if flops else 0.0
+        # fraction of roofline: useful work per chip over the bound time
+        out["roofline_frac"] = (mf / chips / PEAK_FLOPS) / out["bound_s"] \
+            if out["bound_s"] else 0.0
+    return out

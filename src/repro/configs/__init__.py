@@ -1,0 +1,46 @@
+"""Config registry: the 10 assigned architectures + the paper's own models."""
+from __future__ import annotations
+
+from .base import (ModelConfig, ShapeSpec, TrainConfig, SHAPES,
+                   SHAPE_BY_NAME, cell_supported)
+from . import (deepseek_v2_236b, internlm2_20b, llama_paper,
+               mamba2_780m, mistral_large_123b, mistral_nemo_12b,
+               phi3_vision_4_2b, qwen2_7b, qwen3_moe_30b_a3b,
+               whisper_small, zamba2_7b)
+
+# The 10 assigned architectures (the dry-run / roofline grid).
+ASSIGNED = {
+    "qwen2-7b": qwen2_7b.CONFIG,
+    "internlm2-20b": internlm2_20b.CONFIG,
+    "mistral-nemo-12b": mistral_nemo_12b.CONFIG,
+    "mistral-large-123b": mistral_large_123b.CONFIG,
+    "deepseek-v2-236b": deepseek_v2_236b.CONFIG,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b.CONFIG,
+    "zamba2-7b": zamba2_7b.CONFIG,
+    "mamba2-780m": mamba2_780m.CONFIG,
+    "whisper-small": whisper_small.CONFIG,
+    "phi-3-vision-4.2b": phi3_vision_4_2b.CONFIG,
+}
+
+# The paper's own experiment models.
+PAPER = {
+    "llama-20m": llama_paper.LLAMA_20M,
+    "llama-60m": llama_paper.LLAMA_60M,
+    "llama-100m": llama_paper.LLAMA_100M,
+    "llama-tiny": llama_paper.LLAMA_TINY,
+    "encoder-small": llama_paper.ENCODER_SMALL,
+}
+
+CONFIGS = {**ASSIGNED, **PAPER}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(
+            f"unknown arch '{name}'; known: {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+__all__ = ["ModelConfig", "ShapeSpec", "TrainConfig", "SHAPES",
+           "SHAPE_BY_NAME", "cell_supported", "ASSIGNED", "PAPER",
+           "CONFIGS", "get_config"]

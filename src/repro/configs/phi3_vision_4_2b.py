@@ -1,0 +1,12 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP stub
+(input_specs supplies precomputed patch embeddings).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32064, rope_theta=1e4,
+    vision_prefix_len=576,
+    source="hf:microsoft/Phi-3-vision-128k-instruct; hf",
+)

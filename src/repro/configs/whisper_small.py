@@ -1,0 +1,13 @@
+"""whisper-small [audio] — enc-dec; conv/mel frontend is a STUB
+(input_specs supplies precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="audio",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=51865, rope_theta=0.0,
+    is_encoder_decoder=True, num_encoder_layers=12,
+    encoder_seq=1500, max_decode_len=448, frontend_dim=768,
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,123 @@
+"""Low-rank stochastic gradient estimators (Definition 2).
+
+Given a loss ``F(theta)`` for one parameter block ``theta in R^{m x n}`` and a
+projection ``V in R^{n x r}``:
+
+* LowRank-IPA:   ghat = (d/dB F(theta + B V^T)|_{B=0}) V^T  = grad(theta) V V^T
+* LowRank-LR-1pt: ghat = F(theta + sigma Z V^T) * Z V^T / sigma
+* LowRank-LR-2pt: ghat = [F(theta + sZV^T) - F(theta - sZV^T)] / (2s) * Z V^T
+
+The IPA form is computed the memory-efficient way: autodiff w.r.t. the m x r
+auxiliary B only, never materialising the full m x n gradient.  ``*_bgrad``
+variants return the subspace gradient ``G_B in R^{m x r}`` (what Algorithm 1
+actually feeds the optimizer); ``*_lifted`` variants lift back to m x n (what
+the MSE theory talks about).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+LossFn = Callable[[Array], Array]  # theta -> scalar loss
+
+
+# ---------------------------------------------------------------------------
+# IPA family
+# ---------------------------------------------------------------------------
+
+def ipa_full(loss_fn: LossFn, theta: Array) -> Array:
+    """Classical full-rank IPA estimator (Eq. 2): plain backprop."""
+    return jax.grad(loss_fn)(theta)
+
+
+def lowrank_ipa_bgrad(loss_fn: LossFn, theta: Array, v: Array) -> Array:
+    """G_B = d/dB F(theta + B V^T)|_{B=0}  in R^{m x r}.
+
+    This is the quantity Algorithm 1 updates; memory O(m r).
+    """
+    m = theta.shape[0]
+    r = v.shape[1]
+
+    def f_of_b(b):
+        return loss_fn(theta + b @ v.T)
+
+    return jax.grad(f_of_b)(jnp.zeros((m, r), theta.dtype))
+
+
+def lowrank_ipa(loss_fn: LossFn, theta: Array, v: Array) -> Array:
+    """Lifted LowRank-IPA estimator (Eq. 4): G_B V^T in R^{m x n}."""
+    return lowrank_ipa_bgrad(loss_fn, theta, v) @ v.T
+
+
+# ---------------------------------------------------------------------------
+# LR / ZO family
+# ---------------------------------------------------------------------------
+
+def lowrank_lr_1pt(loss_fn: LossFn, theta: Array, v: Array, z: Array,
+                   sigma: float, baseline: float = 0.0) -> Array:
+    """One-point LowRank-LR estimator (Example 3 ii)."""
+    fp = loss_fn(theta + sigma * z @ v.T)
+    return ((fp - baseline) / sigma) * (z @ v.T)
+
+
+def lowrank_lr_2pt_bgrad(loss_fn: LossFn, theta: Array, v: Array, z: Array,
+                         sigma: float) -> Array:
+    """Antithetic two-point subspace gradient: [(F+ - F-)/(2 sigma)] Z  (m x r)."""
+    fp = loss_fn(theta + sigma * z @ v.T)
+    fm = loss_fn(theta - sigma * z @ v.T)
+    return ((fp - fm) / (2.0 * sigma)) * z
+
+
+def lowrank_lr_2pt(loss_fn: LossFn, theta: Array, v: Array, z: Array,
+                   sigma: float) -> Array:
+    """Lifted antithetic two-point LowRank-LR estimator."""
+    return lowrank_lr_2pt_bgrad(loss_fn, theta, v, z, sigma) @ v.T
+
+
+def lr_full_2pt(loss_fn: LossFn, theta: Array, z_full: Array,
+                sigma: float) -> Array:
+    """Classical full-space two-point ZO/LR baseline (Example 2)."""
+    fp = loss_fn(theta + sigma * z_full)
+    fm = loss_fn(theta - sigma * z_full)
+    return ((fp - fm) / (2.0 * sigma)) * z_full
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level IPA: the production path
+# ---------------------------------------------------------------------------
+
+def lowrank_ipa_pytree_bgrad(
+    loss_fn: Callable, theta_tree, v_tree,
+) -> Tuple[Array, object]:
+    """Subspace gradients for a whole pytree of matrix params.
+
+    ``loss_fn(effective_params) -> scalar``; ``v_tree`` has one (n_i x r)
+    projection per (m_i x n_i) leaf of ``theta_tree``.  Returns
+    ``(loss, G_B tree)`` where each G_B leaf is (m_i x r).  Leaves whose
+    ``v`` entry is None are treated as dense trainables (gradient returned
+    at full shape) -- used for norms/bias/router params.
+    """
+
+    def zeros_b(theta, v):
+        if v is None:
+            return jnp.zeros_like(theta)
+        return jnp.zeros((theta.shape[0], v.shape[1]), theta.dtype)
+
+    b0 = jax.tree.map(zeros_b, theta_tree, v_tree,
+                      is_leaf=lambda x: x is None)
+
+    def apply_b(theta, b, v):
+        if v is None:
+            return theta + b
+        return theta + b @ v.T
+
+    def f(b_tree):
+        eff = jax.tree.map(apply_b, theta_tree, b_tree, v_tree,
+                           is_leaf=lambda x: x is None)
+        return loss_fn(eff)
+
+    loss, g_b = jax.value_and_grad(f)(b0)
+    return loss, g_b

@@ -1,0 +1,107 @@
+"""Closed-form MSE theory from the paper (Prop. 1, Thm. 2, Thm. 3, Remark 1).
+
+These functions are the oracles our tests and the toy benchmark check the
+Monte-Carlo estimators against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mse_decomposition(sigma_xi: Array, sigma_theta: Array,
+                      e_p2: Array, c: float) -> dict:
+    """Proposition 1:  MSE = tr(Sigma_xi E[P^2]) + tr(Sigma_Theta E[P^2 - c^2 I])
+                             + (1-c)^2 tr(Sigma_Theta).
+
+    ``sigma_xi``:   Sigma_xi = E[(ghat - g)^T (ghat - g)]          (n x n)
+    ``sigma_theta``: Sigma_Theta = g^T g                            (n x n)
+    ``e_p2``:        E[P^2] of the projection law                   (n x n)
+    """
+    n = e_p2.shape[0]
+    t1 = jnp.trace(sigma_xi @ e_p2)
+    t2 = jnp.trace(sigma_theta @ (e_p2 - c**2 * jnp.eye(n)))
+    t3 = (1.0 - c) ** 2 * jnp.trace(sigma_theta)
+    return {"ipa_lr_variance": t1, "projection_variance": t2,
+            "scalar_bias": t3, "total": t1 + t2 + t3}
+
+
+def trace_ep2_optimal(n: int, r: int, c: float) -> float:
+    """Theorem 2 optimum: min tr(E[P^2]) = n^2 c^2 / r."""
+    return n * n * c * c / r
+
+
+def trace_ep2_gaussian(n: int, r: int, c: float) -> float:
+    """tr(E[P^2]) for the iid Gaussian sampler with entries N(0, c/r).
+
+    For G with iid N(0,1) entries and V = sqrt(c/r) G, P = (c/r) G G^T:
+    E[(G G^T)^2] = r (n + r + 1) I  =>  tr E[P^2] = c^2 n (n + r + 1)/r.
+    """
+    return c * c * n * (n + r + 1) / r
+
+
+def mse_full_rank(sigma_xi: Array) -> Array:
+    """Remark 1 baseline: MSE_F = tr(Sigma_xi)."""
+    return jnp.trace(sigma_xi)
+
+
+def mse_gaussian(sigma_xi: Array, sigma_theta: Array, n: int, r: int) -> Array:
+    """Remark 1: MSE_G = (n+r+1)/r tr(Sigma_xi) + (n+1)/r tr(Sigma_Theta).
+
+    (Gaussian sampler with c = 1.)
+    """
+    return ((n + r + 1) / r) * jnp.trace(sigma_xi) + \
+           ((n + 1) / r) * jnp.trace(sigma_theta)
+
+
+def mse_isotropic_optimal(sigma_xi: Array, sigma_theta: Array,
+                          n: int, r: int, c: float) -> Array:
+    """MSE of the Thm.-2-optimal (Stiefel / coordinate-axis) projector,
+    exact for the *Stiefel* law where E[P^2] = (c^2 n / r) I:
+
+      MSE = (c^2 n / r) tr(Sigma_xi) + (c^2 n / r - c^2) tr(Sigma_Theta)
+            + (1 - c)^2 tr(Sigma_Theta).
+    """
+    k = c * c * n / r
+    return k * jnp.trace(sigma_xi) + (k - c * c) * jnp.trace(sigma_theta) + \
+        (1 - c) ** 2 * jnp.trace(sigma_theta)
+
+
+def phi_min_dependent(sigma_eigs: Array, r: int, c: float,
+                      pi: Array | None = None) -> Array:
+    """Theorem 3 optimal value: Phi_min = c^2 sum_i sigma_i / pi*_i.
+
+    Equivalent to Eq. (16).  If ``pi`` is given it is used directly
+    (to evaluate suboptimal pi as well).
+    """
+    from .samplers import waterfill_inclusion_probs
+    if pi is None:
+        pi = waterfill_inclusion_probs(sigma_eigs, r)
+    return c * c * jnp.sum(sigma_eigs / jnp.maximum(pi, 1e-12))
+
+
+def mse_dependent_optimal(sigma_xi: Array, sigma_theta: Array, r: int,
+                          c: float) -> Array:
+    """Minimal MSE under the optimal instance-dependent projector:
+
+      MSE = Phi_min(Sigma) + (1 - 2c) tr(Sigma_Theta),  Sigma = Sigma_xi + Sigma_Theta.
+    """
+    sigma = sigma_xi + sigma_theta
+    eigs = jnp.linalg.eigvalsh(sigma)
+    eigs = jnp.maximum(eigs, 0.0)
+    return phi_min_dependent(eigs, r, c) + (1 - 2 * c) * jnp.trace(sigma_theta)
+
+
+def empirical_ep2(vs: Array) -> Array:
+    """Monte-Carlo E[P^2] from a batch of sampled projections (k, n, r)."""
+    def p2(v):
+        p = v @ v.T
+        return p @ p
+    return jnp.mean(jax.vmap(p2)(vs), axis=0)
+
+
+def empirical_ep(vs: Array) -> Array:
+    """Monte-Carlo E[P] from a batch of sampled projections (k, n, r)."""
+    return jnp.mean(jax.vmap(lambda v: v @ v.T)(vs), axis=0)

@@ -1,0 +1,243 @@
+"""Random projection samplers for low-rank gradient estimation.
+
+Implements the paper's Algorithms 2-4:
+
+* :func:`gaussian` - vanilla i.i.d. Gaussian projection (the suboptimal
+  baseline of Remark 1).
+* :func:`stiefel` - Haar-Stiefel sampler (Algorithm 2): thin QR of a Gaussian
+  with the sign-fix that makes the law exactly Haar on St(n, r).
+* :func:`coordinate` - coordinate-axis sampler (Algorithm 3): r coordinates
+  chosen uniformly without replacement.
+* :func:`dependent` - instance-dependent optimal sampler (Algorithm 4):
+  eigen-directions of Sigma included with the water-filling probabilities
+  pi* of Theorem 3 via a fixed-size systematic (Madow) pi-ps design, and
+  rescaled by sqrt(c / pi*_i) so that E[V V^T] = c I_n exactly.
+
+All samplers return ``V in R^{n x r}`` with ``E[V V^T] = c I_n`` (the
+admissibility class ``D`` of Definition 3).  The Stiefel / coordinate /
+dependent samplers additionally satisfy the Theorem-2 optimality condition
+``V^T V = (c n / r) I_r`` a.s. (dependent: the Theorem-3 second-moment
+condition instead).
+
+Everything here is jit-able and usable under shard_map / pjit: sampling uses
+only ``jax.random`` primitives, ``jnp.linalg.qr``, cumulative sums and
+searchsorted; there are no data-dependent shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Instance-independent samplers
+# ---------------------------------------------------------------------------
+
+def gaussian(key: Array, n: int, r: int, c: float = 1.0,
+             dtype: jnp.dtype = jnp.float32) -> Array:
+    """Vanilla Gaussian projection, entries N(0, c/r).
+
+    E[V V^T] = (c/r) * r * I = c I, so it is admissible -- but
+    tr(E[P^2]) = c^2 n (n + r + 1) / r > c^2 n^2 / r: strictly suboptimal
+    (Remark 1).
+    """
+    return jnp.sqrt(c / r) * jax.random.normal(key, (n, r), dtype=dtype)
+
+
+def stiefel(key: Array, n: int, r: int, c: float = 1.0,
+            dtype: jnp.dtype = jnp.float32) -> Array:
+    """Haar-Stiefel sampler (Algorithm 2).
+
+    V = alpha * Q D where G = QR (thin), D = diag(sgn(diag R)),
+    alpha = sqrt(c n / r).  The sign fix makes Q D exactly Haar-distributed
+    on the Stiefel manifold St(n, r).
+    """
+    g = jax.random.normal(key, (n, r), dtype=jnp.float32)
+    q, rmat = jnp.linalg.qr(g, mode="reduced")
+    d = jnp.sign(jnp.diagonal(rmat))
+    d = jnp.where(d == 0, 1.0, d)  # measure-zero guard
+    u = q * d[None, :]
+    alpha = jnp.sqrt(c * n / r)
+    return (alpha * u).astype(dtype)
+
+
+def coordinate(key: Array, n: int, r: int, c: float = 1.0,
+               dtype: jnp.dtype = jnp.float32) -> Array:
+    """Coordinate-axis sampler (Algorithm 3).
+
+    Chooses r of the n coordinates uniformly without replacement and scales
+    by alpha = sqrt(c n / r).  Implemented as a uniform random permutation
+    (argsort of iid uniforms) truncated to r -- fixed-size, branch-free.
+    """
+    # argsort of Gaussians = uniform random permutation
+    perm = jnp.argsort(jax.random.uniform(key, (n,)))
+    idx = perm[:r]  # (r,) selected coordinates
+    alpha = jnp.sqrt(c * n / r)
+    v = jnp.zeros((n, r), dtype=dtype).at[idx, jnp.arange(r)].set(
+        jnp.asarray(alpha, dtype=dtype))
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3: water-filling inclusion probabilities
+# ---------------------------------------------------------------------------
+
+def waterfill_inclusion_probs(sigma: Array, r: int,
+                              pi_floor: float = 0.0) -> Array:
+    """Solve Eq. (17): pi*_i = min{1, (r - t) sqrt(sigma_i) / sum_{pi<1} sqrt(sigma_j)}.
+
+    ``sigma`` is the (nonnegative) eigenvalue vector of Sigma, any order.
+    Returns pi* with sum(pi*) == r and 0 < pi*_i <= 1.
+
+    Water-filling: sort sqrt(sigma) descending; find the smallest t such that
+    capping the top-t at 1 and scaling the rest proportionally to
+    sqrt(sigma) keeps all remaining probabilities <= 1.  Fixed-shape scan
+    over candidate t -- jit friendly.
+
+    Directions with sigma_i == 0 receive the residual mass uniformly
+    (they do not affect the objective; Prop. 4 uses exactly this freedom),
+    and are floored at a tiny epsilon to keep pi > 0 admissible.
+    """
+    sigma = jnp.asarray(sigma, jnp.float64) if jax.config.jax_enable_x64 else (
+        jnp.asarray(sigma, jnp.float32))
+    n = sigma.shape[0]
+    if r >= n:
+        return jnp.ones((n,), sigma.dtype)
+    s = jnp.sqrt(jnp.maximum(sigma, 0.0))
+    order = jnp.argsort(-s)  # descending
+    s_sorted = s[order]
+    # suffix sums: suf[t] = sum_{j >= t} s_sorted[j]
+    suf = jnp.cumsum(s_sorted[::-1])[::-1]
+    suf = jnp.concatenate([suf, jnp.zeros((1,), s.dtype)])
+    t_cand = jnp.arange(n)  # candidate number of capped directions
+    # with t capped, the largest uncapped prob is (r - t) * s_sorted[t] / suf[t]
+    denom = jnp.maximum(suf[t_cand], 1e-30)
+    largest_uncapped = (r - t_cand) * s_sorted / denom
+    feasible = (largest_uncapped <= 1.0 + 1e-12) & (t_cand <= r)
+    # smallest feasible t
+    t = jnp.argmax(feasible)  # first True (feasible is monotone in t)
+    scale = (r - t) / jnp.maximum(suf[t], 1e-30)
+    pi_sorted = jnp.where(jnp.arange(n) < t, 1.0,
+                          jnp.minimum(1.0, scale * s_sorted))
+    # Give zero-sigma directions the residual mass uniformly so sum == r.
+    resid = r - jnp.sum(pi_sorted)
+    nzero = jnp.sum(s_sorted <= 0.0)
+    add = jnp.where(s_sorted <= 0.0,
+                    resid / jnp.maximum(nzero, 1), 0.0)
+    pi_sorted = jnp.clip(pi_sorted + add, 1e-12, 1.0)
+    # renormalise tiny numerical drift so sum(pi) == r exactly-ish
+    pi_sorted = pi_sorted * (r / jnp.sum(pi_sorted))
+    pi_sorted = jnp.clip(pi_sorted, 1e-12, 1.0)
+    if pi_floor > 0.0:
+        # Numerical-stability option for training: bound the lift weights
+        # c / pi at c / pi_floor.  Floor then rescale the un-capped mass so
+        # sum(pi) == r still holds (slight deviation from the exact optimum,
+        # bounded by pi_floor * n; E[P] = c I is preserved regardless since
+        # the lift weight is always c / pi_used).
+        pi_sorted = jnp.maximum(pi_sorted, pi_floor)
+        capped = pi_sorted >= 1.0 - 1e-9
+        free = ~capped & (pi_sorted > pi_floor)
+        excess = jnp.sum(pi_sorted) - r
+        free_mass = jnp.sum(jnp.where(free, pi_sorted, 0.0))
+        shrink = jnp.where(free_mass > 0,
+                           1.0 - excess / jnp.maximum(free_mass, 1e-30), 1.0)
+        pi_sorted = jnp.where(free, pi_sorted * shrink, pi_sorted)
+        pi_sorted = jnp.clip(pi_sorted, pi_floor, 1.0)
+    pi = jnp.zeros_like(pi_sorted).at[order].set(pi_sorted)
+    return pi
+
+
+def systematic_sample(key: Array, pi: Array, r: int) -> Array:
+    """Madow systematic pi-ps sampling: fixed size r, Pr(i in J) = pi_i exactly.
+
+    Requires sum(pi) == r.  Random permutation first (so joint inclusions are
+    not tied to index adjacency), then one uniform start u ~ U(0,1): select
+    the indices whose cumulative interval [C_{i-1}, C_i) contains one of the
+    points {u, u+1, ..., u+r-1}.
+
+    Returns a fixed-shape (r,) int32 index array.
+    """
+    n = pi.shape[0]
+    kperm, ku = jax.random.split(key)
+    perm = jax.random.permutation(kperm, n)
+    p = pi[perm]
+    csum = jnp.cumsum(p)  # C_i, last == r (up to fp error)
+    total = csum[-1]
+    u = jax.random.uniform(ku, ()) * (total / r)  # guard fp drift
+    points = u + (total / r) * jnp.arange(r)
+    # index i selected iff exists k: C_{i-1} <= points_k < C_i
+    # equivalently i = searchsorted(csum, points_k, side='right')
+    sel = jnp.searchsorted(csum, points, side="right")
+    sel = jnp.clip(sel, 0, n - 1)
+    return perm[sel].astype(jnp.int32)
+
+
+def dependent(key: Array, eigvecs: Array, pi: Array, r: int, c: float = 1.0,
+              dtype: jnp.dtype = jnp.float32) -> Array:
+    """Instance-dependent optimal sampler (Algorithm 4), given the eigenbasis.
+
+    ``eigvecs``: Q in R^{n x n}, columns = eigenvectors of Sigma.
+    ``pi``: inclusion probabilities pi* from :func:`waterfill_inclusion_probs`.
+
+    V = Q_J diag(sqrt(c / pi*_i))_{i in J};  then E[V V^T] = c I_n and
+    E[Q^T P^2 Q] = c^2 diag(1/pi*), the Theorem-3 optimality conditions.
+    """
+    idx = systematic_sample(key, pi, r)  # (r,)
+    cols = eigvecs[:, idx]  # (n, r)
+    w = jnp.sqrt(c / jnp.maximum(pi[idx], 1e-12))
+    return (cols * w[None, :]).astype(dtype)
+
+
+def dependent_from_sigma(key: Array, sigma_mat: Array, r: int, c: float = 1.0,
+                         dtype: jnp.dtype = jnp.float32) -> Array:
+    """Full Algorithm 4: eigendecompose Sigma, water-fill, sample."""
+    evals, evecs = jnp.linalg.eigh(sigma_mat)
+    pi = waterfill_inclusion_probs(jnp.maximum(evals, 0.0), r)
+    return dependent(key, evecs, pi, r, c=c, dtype=dtype)
+
+
+def dependent_diagonal(key: Array, diag_energy: Array, r: int, c: float = 1.0,
+                       dtype: jnp.dtype = jnp.float32) -> Array:
+    """LLM-scale 'dependent' mode: Sigma approximated as diagonal.
+
+    The eigenbasis is the coordinate basis, so Algorithm 4 reduces to a
+    pi-ps coordinate sampler with weights sqrt(c/pi*): no n x n eig needed.
+    ``diag_energy`` is an (n,) running estimate of diag(Sigma) (e.g. an EMA
+    of squared projected gradients lifted back to coordinates).
+    """
+    n = diag_energy.shape[0]
+    pi = waterfill_inclusion_probs(jnp.maximum(diag_energy, 0.0), r)
+    idx = systematic_sample(key, pi, r)
+    w = jnp.sqrt(c / jnp.maximum(pi[idx], 1e-12))
+    v = jnp.zeros((n, r), dtype=dtype).at[idx, jnp.arange(r)].set(
+        w.astype(dtype))
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SAMPLERS = {
+    "gaussian": gaussian,
+    "stiefel": stiefel,
+    "coordinate": coordinate,
+}
+
+
+def sample_v(name: str, key: Array, n: int, r: int, c: float = 1.0,
+             dtype: jnp.dtype = jnp.float32, **kw) -> Array:
+    """Dispatch by sampler name ('gaussian' | 'stiefel' | 'coordinate' |
+    'dependent' with sigma_mat= / 'dependent_diag' with diag_energy=)."""
+    if name in SAMPLERS:
+        return SAMPLERS[name](key, n, r, c=c, dtype=dtype)
+    if name == "dependent":
+        return dependent_from_sigma(key, kw["sigma_mat"], r, c=c, dtype=dtype)
+    if name == "dependent_diag":
+        return dependent_diagonal(key, kw["diag_energy"], r, c=c, dtype=dtype)
+    raise ValueError(f"unknown sampler '{name}'")

@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes eagerly in Python, validating BlockSpec indexing and numerics
+against :mod:`ref`.  On TPU (``jax.default_backend() in {'tpu'}``) they
+compile to Mosaic.  ``interpret`` can be forced via REPRO_PALLAS_INTERPRET.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .lowrank_forward import lowrank_forward as _fwd
+from .lowrank_update import lowrank_merge as _merge, lowrank_project as _proj
+from .ssd_chunk import ssd_intra_chunk as _ssd
+from .subspace_adam import subspace_adam as _adam
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def lowrank_forward(x, w, v, b, bm=128, bn=128, bk=128):
+    return _fwd(x, w, v, b, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+
+
+@jax.jit
+def lowrank_merge(w, v, b):
+    return _merge(w, v, b, interpret=_interpret())
+
+
+@jax.jit
+def lowrank_project(g, v):
+    return _proj(g, v, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "wd"))
+def subspace_adam(b, g, m, v, lr, step, beta1=0.9, beta2=0.999, eps=1e-8,
+                  wd=0.0):
+    return _adam(b, g, m, v, lr=lr, step=step, beta1=beta1, beta2=beta2,
+                 eps=eps, wd=wd, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("head_block",))
+def ssd_intra_chunk(x, dt, da, b, c, head_block=8):
+    return _ssd(x, dt, da, b, c, head_block=head_block,
+                interpret=_interpret())
+
+
+__all__ = ["lowrank_forward", "lowrank_merge", "lowrank_project",
+           "subspace_adam", "ssd_intra_chunk", "ref"]

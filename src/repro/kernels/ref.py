@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def lowrank_forward(x: Array, w: Array, v: Array, b: Array) -> Array:
+    """y = x W + (x V) B^T.  x (M,K), w (K,N), v (K,r), b (N,r)."""
+    xf = x.astype(jnp.float32)
+    return (xf @ w.astype(jnp.float32) +
+            (xf @ v.astype(jnp.float32)) @ b.astype(jnp.float32).T
+            ).astype(x.dtype)
+
+
+def lowrank_merge(w: Array, v: Array, b: Array) -> Array:
+    """W + V B^T (the outer-iteration weight merge).  fp32 accumulate."""
+    return (w.astype(jnp.float32) +
+            v.astype(jnp.float32) @ b.astype(jnp.float32).T).astype(w.dtype)
+
+
+def lowrank_project(g: Array, v: Array) -> Array:
+    """G_B = G V (the Thm.-1 lift identity).  g (K,N) -> (N,r)? No:
+
+    paper convention for our layout: dB = dY^T P where p = x v.  For the
+    kernel we expose the generic tall-skinny product G^T V with
+    g (K, N), v (K, r) -> (N, r)."""
+    return (g.astype(jnp.float32).T @ v.astype(jnp.float32)).astype(
+        jnp.float32)
+
+
+def subspace_adam(b, g, m, v, *, lr, beta1, beta2, eps, wd, step):
+    """Fused Adam-with-decay on the subspace variable B (all fp32)."""
+    g = g.astype(jnp.float32)
+    m2 = beta1 * m + (1 - beta1) * g
+    v2 = beta2 * v + (1 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) + wd * b
+    return b - lr * delta, m2, v2
+
+
+def ssd_intra_chunk(x, dt, da, bmat, cmat):
+    """One-chunk SSD quadratic part + local end-state.
+
+    x (Q,H,P) f32; dt, da (Q,H); bmat, cmat (Q,H,N).
+    Returns y (Q,H,P), state (H,N,P).
+    """
+    clog = jnp.cumsum(da, axis=0)                    # (Q,H)
+    diff = clog[:, None, :] - clog[None, :, :]       # (Q,Q,H) i - j
+    Q = x.shape[0]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[:, :, None], jnp.exp(diff), 0.0)
+    s = jnp.einsum("ihn,jhn->ijh", cmat, bmat)
+    att = s * L * dt[None, :, :]
+    y = jnp.einsum("ijh,jhp->ihp", att, x)
+    wj = jnp.exp(clog[-1][None] - clog) * dt         # (Q,H)
+    state = jnp.einsum("jhn,jhp,jh->hnp", bmat, x, wj)
+    return y, state

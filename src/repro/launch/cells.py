@@ -1,0 +1,244 @@
+"""(architecture x input-shape) cell construction for the dry-run.
+
+``build_cell(cfg, shape, mesh, tcfg)`` returns
+    (step_fn, abstract_args, in_shardings, meta)
+where ``jax.jit(step_fn, in_shardings=...).lower(*abstract_args).compile()``
+is the assignment's required artifact for that cell.
+
+Input-shape semantics per the assignment:
+  * train_4k            -> the Algorithm-1 INNER train step (hot path)
+  * prefill_32k         -> serve prefill (cache write + last-pos logits)
+  * decode_32k/long_500k-> serve_step: ONE new token against a full cache
+
+whisper-small adaptation (DESIGN.md §4): encoder is fixed at 1500 frames and
+the decoder at 448 positions; train/prefill/decode cells use those native
+shapes at the assigned batch sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec, TrainConfig
+from ..models import encdec, lm
+from ..models.common import act_dtype
+from ..optim import subspace
+from ..sharding import rules
+from ..sharding import ctx as shard_ctx
+from ..train import steps as steps_mod
+
+Array = jax.Array
+
+
+def _ns(mesh, *parts):
+    return NamedSharding(mesh, P(*parts))
+
+
+def _maybe(mesh, axes, size: int):
+    """axes if size divides the mesh extent, else None (replicate)."""
+    if axes is None:
+        return None
+    ext = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        if a not in mesh.shape:
+            return None
+        ext *= mesh.shape[a]
+    return axes if size % ext == 0 else None
+
+
+def adapt_config(cfg: ModelConfig, mesh) -> ModelConfig:
+    """Mesh-dependent knobs (MoE dispatch groups = DP shards)."""
+    if cfg.family == "moe":
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.shape:
+                dp *= mesh.shape[a]
+        return cfg.replace(moe_groups=dp)
+    return cfg
+
+
+def _param_shardings(mesh, cfg):
+    model = encdec if cfg.is_encoder_decoder else lm
+    specs = model.param_specs(cfg)
+    pspecs = rules.param_pspecs(mesh, specs)
+    return specs, rules.named_shardings(mesh, pspecs)
+
+
+def _opt_shardings(mesh, specs, opt_abs: subspace.SubspaceState):
+    slot_ps = rules.slot_pspecs(mesh, specs, opt_abs.slots)
+    slot_sh = rules.named_shardings(mesh, slot_ps)
+    rep = NamedSharding(mesh, P())
+    return subspace.SubspaceState(slots=slot_sh, step=rep, outer_step=rep,
+                                  key=rep)
+
+
+def _batch_axes(mesh, b: int):
+    return rules.batch_pspec(mesh, b)
+
+
+def _decode_state_shardings(mesh, cfg, state_abs, batch: int):
+    """Sharding tree matching a DecodeState / EncDecState."""
+    ba = _batch_axes(mesh, batch)
+    seq_ax = None if ba is not None else _maybe(mesh, "data", 1) and "data"
+
+    def cache_spec(x):
+        if x.ndim == 5:   # (L, B, S, H, D)
+            h_ax = _maybe(mesh, "model", x.shape[3])
+            # kv heads < tp (GQA/MLA): shard the SEQUENCE dim over model
+            # instead — decode attention partial-softmaxes over seq shards.
+            s_ax = None
+            if h_ax is None:
+                s_ax = _maybe(mesh, "model", x.shape[2])
+            if s_ax is None and ba is None:
+                s_ax = _maybe(mesh, "data", x.shape[2])
+            return _ns(mesh, None, ba, s_ax, h_ax, None)
+        if x.ndim == 4:   # (L, B, K-1, ch) conv state
+            return _ns(mesh, None, ba, None,
+                       _maybe(mesh, "model", x.shape[3]))
+        if x.ndim == 0:
+            return _ns(mesh)
+        return _ns(mesh, *([None] * x.ndim))
+
+    def ssm_spec(x):      # (L, B, H, N, P)
+        return _ns(mesh, None, ba, _maybe(mesh, "model", x.shape[2]),
+                   None, None)
+
+    def assign(path_leaf):
+        return None
+
+    # walk the NamedTuple manually (fields may be None)
+    if hasattr(state_abs, "self_kv"):  # EncDecState
+        kv = state_abs.self_kv
+        return type(state_abs)(
+            self_kv=type(kv)(k=cache_spec(kv.k), v=cache_spec(kv.v),
+                             length=_ns(mesh)),
+            cross_k=cache_spec(state_abs.cross_k),
+            cross_v=cache_spec(state_abs.cross_v),
+            pos=_ns(mesh))
+    kv = state_abs.kv
+    kv_sh = None if kv is None else type(kv)(
+        k=cache_spec(kv.k), v=cache_spec(kv.v), length=_ns(mesh))
+    ssm = state_abs.ssm
+    ssm_sh = None if ssm is None else type(ssm)(
+        ssm=ssm_spec(ssm.ssm), conv=cache_spec(ssm.conv))
+    sh = state_abs.shared_kv
+    sh_sh = None if sh is None else type(sh)(
+        k=cache_spec(sh.k), v=cache_spec(sh.v), length=_ns(mesh))
+    return type(state_abs)(kv=kv_sh, ssm=ssm_sh, shared_kv=sh_sh,
+                           pos=_ns(mesh))
+
+
+# ---------------------------------------------------------------------------
+# Per-kind builders
+# ---------------------------------------------------------------------------
+
+def _train_batch_abs(cfg, shape: ShapeSpec):
+    b = shape.global_batch
+    if cfg.is_encoder_decoder:
+        s_dec = cfg.max_decode_len
+        return {
+            "frames": jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), act_dtype(cfg)),
+            "tokens": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+        }
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+    }
+    if cfg.vision_prefix_len:
+        out["extra_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_prefix_len, cfg.d_model), act_dtype(cfg))
+    return out
+
+
+def _train_batch_shardings(mesh, cfg, batch_abs):
+    ba = _batch_axes(mesh, next(iter(batch_abs.values())).shape[0])
+    out = {}
+    for k, v in batch_abs.items():
+        out[k] = _ns(mesh, ba, *([None] * (v.ndim - 1)))
+    return out
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               tcfg: Optional[TrainConfig] = None,
+               optimizer: Optional[str] = None):
+    """Returns (step_fn, abstract_args, in_shardings, meta)."""
+    tcfg = tcfg or TrainConfig()
+    if optimizer:
+        tcfg = dataclasses.replace(tcfg, optimizer=optimizer)
+    cfg = adapt_config(cfg, mesh)
+    shard_ctx.set_mesh(mesh)  # activation constraints bind to this mesh
+    specs, param_sh = _param_shardings(mesh, cfg)
+    model = encdec if cfg.is_encoder_decoder else lm
+    params_abs = model.abstract_params(cfg)
+    meta = {"arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+            "optimizer": tcfg.optimizer}
+
+    if shape.kind == "train":
+        batch_abs = _train_batch_abs(cfg, shape)
+        batch_sh = _train_batch_shardings(mesh, cfg, batch_abs)
+        if tcfg.optimizer == "adamw":
+            from ..optim import adamw
+            step = steps_mod.make_adamw_train_step(cfg, tcfg)
+            opt_abs = jax.eval_shape(adamw.init, params_abs)
+            opt_sh = adamw.AdamWState(m=param_sh, v=param_sh,
+                                      step=_ns(mesh))
+        else:
+            step = steps_mod.make_train_step(cfg, tcfg)
+            opt_abs = jax.eval_shape(
+                lambda p: subspace.init(p, tcfg, jax.random.key(0)),
+                params_abs)
+            opt_sh = _opt_shardings(mesh, specs, opt_abs)
+        args = (params_abs, opt_abs, batch_abs)
+        shardings = (param_sh, opt_sh, batch_sh)
+        return step, args, shardings, meta
+
+    b = shape.global_batch
+    if cfg.is_encoder_decoder:
+        state_abs = encdec.alloc_state(cfg, b, cfg.encoder_seq,
+                                       abstract=True)
+        state_sh = _decode_state_shardings(mesh, cfg, state_abs, b)
+        if shape.kind == "prefill":
+            step = steps_mod.make_prefill_step(cfg)
+            batch_abs = {
+                "frames": jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_seq, cfg.d_model), act_dtype(cfg)),
+                "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+            ba = _batch_axes(mesh, b)
+            batch_sh = {"frames": _ns(mesh, ba, None, None),
+                        "tokens": _ns(mesh, ba, None)}
+            return step, (params_abs, batch_abs, state_abs), \
+                (param_sh, batch_sh, state_sh), meta
+        step = steps_mod.make_decode_step(cfg)
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_sh = _ns(mesh, _batch_axes(mesh, b), None)
+        return step, (params_abs, tok, state_abs), \
+            (param_sh, tok_sh, state_sh), meta
+
+    max_len = shape.seq_len + cfg.vision_prefix_len
+    state_abs = lm.alloc_decode_state(cfg, b, max_len, abstract=True)
+    state_sh = _decode_state_shardings(mesh, cfg, state_abs, b)
+    ba = _batch_axes(mesh, b)
+    if shape.kind == "prefill":
+        step = steps_mod.make_prefill_step(cfg)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len),
+                                                    jnp.int32)}
+        batch_sh = {"tokens": _ns(mesh, ba, None)}
+        if cfg.vision_prefix_len:
+            batch_abs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_prefix_len, cfg.d_model), act_dtype(cfg))
+            batch_sh["extra_embeds"] = _ns(mesh, ba, None, None)
+        return step, (params_abs, batch_abs, state_abs), \
+            (param_sh, batch_sh, state_sh), meta
+
+    # decode: one new token against a seq_len-deep cache
+    step = steps_mod.make_decode_step(cfg)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_sh = _ns(mesh, ba, None)
+    return step, (params_abs, tok, state_abs), \
+        (param_sh, tok_sh, state_sh), meta

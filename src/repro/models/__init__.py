@@ -1,0 +1,5 @@
+"""Model zoo. ``lm`` covers dense/moe/ssm/hybrid/vlm decoder LMs;
+``encdec`` is the whisper-style encoder-decoder; ``encoder_cls`` the
+bidirectional classifier used by the LR fine-tuning reproduction."""
+from . import attention, common, encdec, encoder_cls, linear, lm, moe, ssm  # noqa: F401
+from .linear import LRPack, linear as apply_linear, pack_tree  # noqa: F401

@@ -1,0 +1,213 @@
+"""Attention: blockwise (flash-style) GQA, decode-with-cache, and MLA.
+
+Pure-JAX online-softmax blockwise attention.  Memory is O(S * chunk) instead
+of O(S^2): queries are processed in chunks (``lax.map``), keys/values are
+streamed in chunks (``lax.scan``), and both levels are rematerialised
+(``jax.checkpoint``) so the backward pass never holds full score matrices.
+
+GQA is computed in grouped form — KV heads are never materialised repeated.
+
+Layout conventions:
+  q: (B, Sq, Hq, D)   k: (B, Skv, Hkv, D)   v: (B, Skv, Hkv, Dv)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of ``s`` that is <= target (falls back to s)."""
+    if s <= target:
+        return s
+    for c in range(min(target, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _chunk(x: Array, axis: int, size: int) -> Array:
+    """Split ``axis`` into (n_chunks, size)."""
+    shape = list(x.shape)
+    n = shape[axis] // size
+    shape[axis:axis + 1] = [n, size]
+    return x.reshape(shape)
+
+
+def blockwise_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True,
+    q_offset=0,
+    kv_valid_len: Optional[Array] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    softmax_scale: Optional[float] = None,
+    cp_groups: int = 1,
+) -> Array:
+    """Online-softmax attention, O(S * chunk) memory.
+
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``kv_valid_len``: if given, keys at positions >= kv_valid_len are masked
+    (decode with a pre-allocated cache).
+    ``cp_groups``: context parallelism — split the query sequence into
+    contiguous groups folded into the batch dim (each group carries its own
+    position offset; KV stays whole).  Used when heads don't divide the TP
+    axis: the group dim is shardable over ``model`` (see lm.attn_apply).
+    """
+    if cp_groups > 1 and q.shape[1] % cp_groups == 0 and q.shape[1] > 1:
+        B, Sq, Hq, D = q.shape
+        g = cp_groups
+        from ..sharding.ctx import constrain as _c
+        qg = _c(q.reshape(B, g, Sq // g, Hq, D), "batch", "tp", None, None,
+                None)
+        offs = q_offset + (Sq // g) * jnp.arange(g, dtype=jnp.int32)
+        out = jax.vmap(
+            lambda qq, off: blockwise_attention(
+                qq, k, v, causal=causal, q_offset=off,
+                kv_valid_len=kv_valid_len, q_chunk=q_chunk,
+                kv_chunk=kv_chunk, softmax_scale=softmax_scale),
+            in_axes=(1, 0), out_axes=1)(qg, offs)
+        return out.reshape(B, Sq, Hq, out.shape[-1])
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    # Pad awkward lengths (vlm prefix, whisper 1500) up to a chunk multiple
+    # instead of degrading to tiny divisor chunks; padded keys are masked,
+    # padded queries sliced off.
+    Sq0, Skv0 = Sq, Skv
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    if Sq % qc:
+        pad = qc - Sq % qc
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sq += pad
+    if Skv % kc:
+        pad = kc - Skv % kc
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = jnp.asarray(Skv0, jnp.int32)
+        Skv += pad
+    nq, nk = Sq // qc, Skv // kc
+
+    # (nq, B, qc, Hkv, G, D) / (nk, B, kc, Hkv, D)
+    qr = _chunk(q, 1, qc).reshape(B, nq, qc, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kr = _chunk(k, 1, kc).transpose(1, 0, 2, 3, 4)
+    vr = _chunk(v, 1, kc).transpose(1, 0, 2, 3, 4)
+
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    def one_q_chunk(qi, qblk):
+        qpos = q_offset + qi * qc + jnp.arange(qc, dtype=jnp.int32)  # (qc,)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            ki, kblk, vblk = inp
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ki * kc + jnp.arange(kc, dtype=jnp.int32)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if kv_valid_len is not None:
+                mask &= (kpos < kv_valid_len)[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        init = (jnp.zeros((B, qc, Hkv, G, Dv), jnp.float32),
+                jnp.full((B, qc, Hkv, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, qc, Hkv, G), jnp.float32))
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False),
+            init, (jnp.arange(nk, dtype=jnp.int32), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    out = jax.lax.map(jax.checkpoint(
+        lambda args: one_q_chunk(*args), prevent_cse=False),
+        (jnp.arange(nq, dtype=jnp.int32), qr))
+    # (nq, B, qc, Hkv, G, Dv) -> (B, Sq, Hq, Dv)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, Dv)
+    return out[:, :Sq0] if Sq != Sq0 else out
+
+
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, cur_len: Array, *,
+    softmax_scale: Optional[float] = None,
+) -> Array:
+    """Single-token attention over a pre-allocated KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D/Dv); cur_len: () int32 —
+    number of valid cache entries (the new token's K/V must already be
+    written at position cur_len - 1).
+    """
+    B, _, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax, dtype=jnp.int32)
+    s = jnp.where((pos < cur_len)[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dv).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked KV cache. k/v: (L, B, Smax, Hkv, D)."""
+    k: Array
+    v: Array
+    length: Array  # () int32 — valid entries
+
+    @staticmethod
+    def alloc(layers: int, batch: int, max_len: int, kv_heads: int,
+              head_dim: int, v_dim: Optional[int] = None,
+              dtype=jnp.bfloat16) -> "KVCache":
+        vd = v_dim or head_dim
+        return KVCache(
+            k=jnp.zeros((layers, batch, max_len, kv_heads, head_dim), dtype),
+            v=jnp.zeros((layers, batch, max_len, kv_heads, vd), dtype),
+            length=jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def abstract(layers: int, batch: int, max_len: int, kv_heads: int,
+                 head_dim: int, v_dim: Optional[int] = None,
+                 dtype=jnp.bfloat16) -> "KVCache":
+        vd = v_dim or head_dim
+        return KVCache(
+            k=jax.ShapeDtypeStruct((layers, batch, max_len, kv_heads,
+                                    head_dim), dtype),
+            v=jax.ShapeDtypeStruct((layers, batch, max_len, kv_heads, vd),
+                                   dtype),
+            length=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def cache_update(cache_k: Array, cache_v: Array, k_new: Array, v_new: Array,
+                 index: Array):
+    """Write (B, S_new, Hkv, D) at position ``index`` of (B, Smax, Hkv, D)."""
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, index, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, index, 0, 0))
+    return cache_k, cache_v

@@ -1,0 +1,139 @@
+"""Shared model machinery: ParamSpec trees, norms, RoPE, initializers.
+
+Parameters are plain pytrees (nested dicts of jax.Array).  Every model
+exposes ``param_specs(cfg) -> dict[str, ParamSpec]`` describing shape, dtype,
+logical sharding axes and initializer.  From the specs we derive:
+
+* ``init_params``      - materialised random init (real runs / smoke tests)
+* ``abstract_params``  - ShapeDtypeStructs (dry-run lowering, no allocation)
+* ``partition_specs``  - PartitionSpec tree via logical-axis rules
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype
+    logical_axes: Tuple[Optional[str], ...]   # one name (or None) per dim
+    init: str = "normal"                      # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def init_param(key: Array, spec: ParamSpec) -> Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape, jnp.float32)
+                ).astype(spec.dtype)
+    if spec.init == "scaled":  # fan-in scaled
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        s = 1.0 / np.sqrt(max(fan_in, 1))
+        return (s * jax.random.normal(key, spec.shape, jnp.float32)
+                ).astype(spec.dtype)
+    if spec.init == "ssm_a":   # mamba A_log init: log of uniform [1, 16]
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if spec.init == "ssm_dt":  # dt_bias: softplus-inv of uniform [1e-3, 0.1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               minval=np.log(1e-3), maxval=np.log(0.1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def tree_init(key: Array, specs) -> dict:
+    """Materialise a spec tree into a param tree (deterministic per-path)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_abstract(specs) -> dict:
+    return jax.tree.map(lambda s: s.abstract(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_logical_axes(specs) -> dict:
+    return jax.tree.map(lambda s: s.logical_axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate) * up
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim/2,) inverse frequencies, f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., S, H, D); positions: broadcastable (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (...,S,1,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dtype helpers
+# ---------------------------------------------------------------------------
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+def act_dtype(cfg) -> jnp.dtype:
+    return DTYPES[cfg.dtype]
+
+
+def prm_dtype(cfg) -> jnp.dtype:
+    return DTYPES[cfg.param_dtype]

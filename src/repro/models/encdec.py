@@ -1,0 +1,248 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, d).  The transformer backbone
+(bidirectional encoder, causal decoder with cross-attention) is real.
+
+No RoPE (whisper uses absolute positions): sinusoidal for the encoder,
+learned for the decoder.  MLPs are GELU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (KVCache, blockwise_attention, cache_update,
+                        decode_attention)
+from .common import ParamSpec, rms_norm, tree_abstract, tree_init, \
+    act_dtype, prm_dtype
+from .linear import linear
+from ..sharding.ctx import constrain
+
+Array = jax.Array
+
+
+def _ckpt(fn):
+    """Remat for scan bodies: prevent_cse=False avoids the optimization
+    barriers that block dtype folding of saved residuals (scan already
+    provides the CSE protection remat's barriers exist for)."""
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _w(cfg, shape, axes, init="scaled"):
+    return ParamSpec(shape, prm_dtype(cfg), axes, init=init)
+
+
+def _attn(cfg, d):
+    hd = cfg.resolved_head_dim
+    h = cfg.num_heads
+    return {
+        "wq": _w(cfg, (d, h * hd), ("embed", "q_heads")),
+        "wk": _w(cfg, (d, h * hd), ("embed", "kv_heads")),
+        "wv": _w(cfg, (d, h * hd), ("embed", "kv_heads")),
+        "wo": _w(cfg, (h * hd, d), ("q_heads", "embed")),
+    }
+
+
+def _mlp(cfg, d):
+    return {"w1": _w(cfg, (d, cfg.d_ff), ("embed", "ffn")),
+            "w2": _w(cfg, (cfg.d_ff, d), ("ffn", "embed"))}
+
+
+def _norm(cfg, d):
+    return ParamSpec((d,), prm_dtype(cfg), (None,), "ones")
+
+
+def _stack(spec, n):
+    return ParamSpec((n,) + spec.shape, spec.dtype,
+                     ("layers",) + spec.logical_axes, spec.init, spec.scale)
+
+
+def param_specs(cfg) -> dict:
+    d = cfg.d_model
+    enc_layer = {"ln1": _norm(cfg, d), "attn": _attn(cfg, d),
+                 "ln2": _norm(cfg, d), "mlp": _mlp(cfg, d)}
+    dec_layer = {"ln1": _norm(cfg, d), "self_attn": _attn(cfg, d),
+                 "ln2": _norm(cfg, d), "cross_attn": _attn(cfg, d),
+                 "ln3": _norm(cfg, d), "mlp": _mlp(cfg, d)}
+    stack = lambda tree, n: jax.tree.map(
+        lambda sp: _stack(sp, n), tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    vocab = cfg.vocab_size
+    return {
+        "enc": {"layers": stack(enc_layer, cfg.num_encoder_layers),
+                "final_norm": _norm(cfg, d)},
+        "dec": {"tok": ParamSpec((vocab, d), prm_dtype(cfg),
+                                 ("vocab", "embed"), "normal"),
+                "pos": ParamSpec((cfg.max_decode_len, d), prm_dtype(cfg),
+                                 (None, "embed"), "normal"),
+                "layers": stack(dec_layer, cfg.num_layers),
+                "final_norm": _norm(cfg, d)},
+        "unembed": ParamSpec((d, vocab), prm_dtype(cfg),
+                             ("embed", "vocab"), "scaled"),
+    }
+
+
+def init_params(cfg, key):
+    return tree_init(key, param_specs(cfg))
+
+
+def abstract_params(cfg):
+    return tree_abstract(param_specs(cfg))
+
+
+def _sinusoid(length: int, d: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(
+        np.float32)
+
+
+def _mha(h, p, cfg, *, kv_h=None, causal, q_offset=0):
+    """Self (kv_h=None) or cross attention, full-sequence."""
+    B, S, d = h.shape
+    hd = cfg.resolved_head_dim
+    nh = cfg.num_heads
+    src = h if kv_h is None else kv_h
+    q = constrain(linear(h, p["wq"]).reshape(B, S, nh, hd),
+                  "batch", None, "tp", None)
+    k = constrain(linear(src, p["wk"]).reshape(B, src.shape[1], nh, hd),
+                  "batch", None, "tp", None)
+    v = constrain(linear(src, p["wv"]).reshape(B, src.shape[1], nh, hd),
+                  "batch", None, "tp", None)
+    out = blockwise_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              q_chunk=cfg.attn_chunk // 2,
+                              kv_chunk=cfg.attn_chunk)
+    return constrain(linear(out.reshape(B, S, nh * hd), p["wo"]),
+                     "batch", "sp", None)
+
+
+def _gelu_mlp(h, p):
+    inner = constrain(jax.nn.gelu(linear(h, p["w1"])), "batch", None, "tp")
+    return constrain(linear(inner, p["w2"]), "batch", "sp", None)
+
+
+def encode(params, frames: Array, cfg) -> Array:
+    """frames: (B, S_enc, d) precomputed frame embeddings (stub frontend)."""
+    d = cfg.d_model
+    pos = jnp.asarray(_sinusoid(frames.shape[1], d), act_dtype(cfg))
+    h = frames.astype(act_dtype(cfg)) + pos[None]
+
+    def body(h, lp):
+        h = h + _mha(rms_norm(h, lp["ln1"], cfg.norm_eps), lp["attn"], cfg,
+                     causal=False)
+        h = h + _gelu_mlp(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["mlp"])
+        return h, None
+
+    h, _ = jax.lax.scan(_ckpt(body), h, params["enc"]["layers"])
+    return rms_norm(h, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def decoder_hidden(params, tokens: Array, enc_out: Array, cfg) -> Array:
+    """Teacher-forced decoder pass. tokens: (B, S_dec)."""
+    B, S = tokens.shape
+    h = jnp.take(params["dec"]["tok"], tokens, axis=0)
+    h = h + params["dec"]["pos"][:S][None].astype(h.dtype)
+
+    def body(h, lp):
+        h = h + _mha(rms_norm(h, lp["ln1"], cfg.norm_eps), lp["self_attn"],
+                     cfg, causal=True)
+        h = h + _mha(rms_norm(h, lp["ln2"], cfg.norm_eps), lp["cross_attn"],
+                     cfg, kv_h=enc_out, causal=False)
+        h = h + _gelu_mlp(rms_norm(h, lp["ln3"], cfg.norm_eps), lp["mlp"])
+        return h, None
+
+    h, _ = jax.lax.scan(_ckpt(body), h, params["dec"]["layers"])
+    return rms_norm(h, params["dec"]["final_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params, batch: dict, cfg):
+    """batch: {"frames": (B,Se,d), "tokens": (B,Sd)} -> decoder hidden."""
+    enc_out = encode(params, batch["frames"], cfg)
+    h = decoder_hidden(params, batch["tokens"], enc_out, cfg)
+    return h, {"lb_loss": jnp.zeros((), jnp.float32),
+               "router_z": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class EncDecState(NamedTuple):
+    self_kv: KVCache            # (L, B, max_dec, H, hd)
+    cross_k: Array              # (L, B, S_enc, H, hd)
+    cross_v: Array
+    pos: Array
+
+
+def alloc_state(cfg, batch: int, enc_len: int, abstract: bool = False):
+    dt = act_dtype(cfg)
+    L, H, hd = cfg.num_layers, cfg.num_heads, cfg.resolved_head_dim
+    mk = KVCache.abstract if abstract else KVCache.alloc
+    self_kv = mk(L, batch, cfg.max_decode_len, H, hd, dtype=dt)
+    shape = (L, batch, enc_len, H, hd)
+    if abstract:
+        ck = jax.ShapeDtypeStruct(shape, dt)
+        cv = jax.ShapeDtypeStruct(shape, dt)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        ck = jnp.zeros(shape, dt)
+        cv = jnp.zeros(shape, dt)
+        pos = jnp.zeros((), jnp.int32)
+    return EncDecState(self_kv, ck, cv, pos)
+
+
+def start_decode(params, frames: Array, cfg, state: EncDecState):
+    """Run the encoder and populate the cross-attention cache."""
+    enc_out = encode(params, frames, cfg)
+    B, Se, d = enc_out.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+
+    def per_layer(lp):
+        k = linear(enc_out, lp["cross_attn"]["wk"]).reshape(B, Se, H, hd)
+        v = linear(enc_out, lp["cross_attn"]["wv"]).reshape(B, Se, H, hd)
+        return k, v
+
+    ck, cv = jax.lax.map(per_layer, params["dec"]["layers"])
+    return state._replace(cross_k=ck.astype(state.cross_k.dtype),
+                          cross_v=cv.astype(state.cross_v.dtype))
+
+
+def decode_step(params, token: Array, cfg, state: EncDecState):
+    """One decoder token. token: (B, 1)."""
+    B = token.shape[0]
+    pos = state.pos
+    h = jnp.take(params["dec"]["tok"], token, axis=0)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        params["dec"]["pos"], pos, 1, 0)[None].astype(h.dtype)
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = linear(hn, lp["self_attn"]["wq"]).reshape(B, 1, H, hd)
+        kn = linear(hn, lp["self_attn"]["wk"]).reshape(B, 1, H, hd)
+        vn = linear(hn, lp["self_attn"]["wv"]).reshape(B, 1, H, hd)
+        sk, sv = cache_update(sk, sv, kn, vn, pos)
+        a = decode_attention(q, sk, sv, pos + 1)
+        h = h + linear(a.reshape(B, 1, H * hd), lp["self_attn"]["wo"])
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        q = linear(hn, lp["cross_attn"]["wq"]).reshape(B, 1, H, hd)
+        a = decode_attention(q, ck, cv, jnp.asarray(ck.shape[1], jnp.int32))
+        h = h + linear(a.reshape(B, 1, H * hd), lp["cross_attn"]["wo"])
+        h = h + _gelu_mlp(rms_norm(h, lp["ln3"], cfg.norm_eps), lp["mlp"])
+        return h, (sk, sv)
+
+    h, (nsk, nsv) = jax.lax.scan(
+        body, h, (params["dec"]["layers"], state.self_kv.k, state.self_kv.v,
+                  state.cross_k, state.cross_v))
+    h = rms_norm(h, params["dec"]["final_norm"], cfg.norm_eps)
+    lg = linear(h, params["unembed"])
+    new_state = state._replace(
+        self_kv=state.self_kv._replace(k=nsk, v=nsv, length=pos + 1),
+        pos=pos + 1)
+    return lg, new_state

@@ -1,0 +1,61 @@
+"""Bidirectional encoder + classification head.
+
+The scaled-down stand-in for RoBERTa-large in the paper's Table-1/2/3
+LR-fine-tuning experiments (offline environment: no pretrained checkpoints).
+Reuses the dense transformer blocks with ``causal=False``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rms_norm, tree_abstract, tree_init, \
+    act_dtype, prm_dtype
+from .linear import linear
+from .lm import _attn_specs, _mlp_specs, _norm_spec, _stack, dense_block
+
+Array = jax.Array
+
+
+def _ckpt(fn):
+    """Remat for scan bodies: prevent_cse=False avoids the optimization
+    barriers that block dtype folding of saved residuals (scan already
+    provides the CSE protection remat's barriers exist for)."""
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def param_specs(cfg, n_classes: int) -> dict:
+    d = cfg.d_model
+    layer = {"ln1": _norm_spec(cfg, d), "attn": _attn_specs(cfg, d),
+             "ln2": _norm_spec(cfg, d), "mlp": _mlp_specs(cfg, d, cfg.d_ff)}
+    return {
+        "embed": {"tok": ParamSpec((cfg.vocab_size, d), prm_dtype(cfg),
+                                   ("vocab", "embed"), "normal"),
+                  "pos": ParamSpec((2048, d), prm_dtype(cfg),
+                                   (None, "embed"), "normal")},
+        "layers": jax.tree.map(lambda sp: _stack(sp, cfg.num_layers), layer,
+                               is_leaf=lambda x: isinstance(x, ParamSpec)),
+        "final_norm": _norm_spec(cfg, d),
+        "head": ParamSpec((d, n_classes), jnp.float32,
+                          ("embed", None), "scaled"),
+    }
+
+
+def init_params(cfg, n_classes: int, key):
+    return tree_init(key, param_specs(cfg, n_classes))
+
+
+def forward(params, tokens: Array, cfg) -> Array:
+    """tokens: (B, S) -> class logits (B, n_classes)."""
+    B, S = tokens.shape
+    h = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    h = h + params["embed"]["pos"][:S][None].astype(h.dtype)
+
+    def body(h, lp):
+        h, _, _ = dense_block(h, lp, cfg, causal=False)
+        return h, None
+
+    h, _ = jax.lax.scan(_ckpt(body), h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    pooled = jnp.mean(h, axis=1).astype(jnp.float32)
+    return linear(pooled, params["head"])

@@ -1,0 +1,157 @@
+"""Low-rank-aware linear primitive — the memory mechanism of the paper.
+
+Every matmul weight in the model zoo is consumed through :func:`linear`.
+During low-rank (Algorithm 1) inner steps the trainer *packs* each trainable
+matrix ``W (k x n_out)`` together with its subspace state ``(B, V)`` into an
+:class:`LRPack`; the model code is oblivious.
+
+The packed path evaluates
+
+    y = x W + (x V) B^T,        V: (k, r), B: (n_out, r)
+
+through a ``jax.custom_vjp`` whose residuals are the *projected* activations
+``p = x V`` (r floats per token instead of k).  The backward pass produces
+only ``dB = dy^T p`` — the full ``k x n_out`` gradient is never formed and
+the full activation ``x`` is never saved for the weight gradient.  This is
+exactly the paper's Section-4.2 memory claim, realised in autodiff rather
+than PyTorch module hooks.
+
+Cotangents for ``W`` and ``V`` are symbolic zeros (frozen during inner
+steps); XLA DCEs them because the trainer only differentiates w.r.t. ``B``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+class LRPack:
+    """A weight packed with its low-rank subspace state.
+
+    ``w``: (k, n_out) frozen base weight.
+    ``b``: (n_out, r) trainable subspace variable (Algorithm 1's B).
+    ``v``: (k, r) fixed projection for the current outer iteration.
+    """
+
+    __slots__ = ("w", "b", "v")
+
+    def __init__(self, w, b, v):
+        self.w, self.b, self.v = w, b, v
+
+    def tree_flatten(self):
+        return (self.w, self.b, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):
+        return f"LRPack(w={getattr(self.w, 'shape', None)}, " \
+               f"b={getattr(self.b, 'shape', None)}, " \
+               f"v={getattr(self.v, 'shape', None)})"
+
+
+@jax.custom_vjp
+def lowrank_matmul(x: Array, w: Array, b: Array, v: Array) -> Array:
+    """y = x @ w + (x @ v) @ b.T with projected-residual backward."""
+    return x @ w + (x @ v) @ b.T
+
+
+def _lowrank_matmul_fwd(x, w, b, v):
+    p = x @ v                     # (..., r) — the only saved activation
+    y = x @ w + p @ b.T
+    return y, (p, w, b, v)
+
+
+def _lowrank_matmul_bwd(res, dy):
+    p, w, b, v = res
+    # dB = dy^T p, contracting all leading (batch/seq) axes.
+    nb = dy.ndim - 1
+    db = jax.lax.dot_general(
+        dy, p, (((tuple(range(nb)),) * 2), ((), ())),
+        preferred_element_type=jnp.float32).astype(b.dtype)
+    # dx = dy @ (w + v b^T)^T = dy @ w^T + (dy @ b) @ v^T
+    dx = dy @ w.T + (dy @ b) @ v.T
+    # w, v frozen in inner steps -> symbolic-ish zeros (DCE'd by XLA).
+    return dx, jnp.zeros_like(w), db, jnp.zeros_like(v)
+
+
+lowrank_matmul.defvjp(_lowrank_matmul_fwd, _lowrank_matmul_bwd)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _gdb(x: Array, dtype_str: str) -> Array:
+    return x
+
+
+def _gdb_fwd(x, dtype_str):
+    return x, None
+
+
+def _gdb_bwd(dtype_str, _, dy):
+    return (dy.astype(dtype_str),)
+
+
+_gdb.defvjp(_gdb_fwd, _gdb_bwd)
+
+
+def grad_dtype_barrier(x: Array) -> Array:
+    """Identity whose backward casts the cotangent to the primal dtype.
+
+    f32 upcasts inside norms/softmax otherwise make the whole backward
+    residual stream f32 — doubling the dx all-reduce volume (measured
+    6 GB/layer on mistral-large; EXPERIMENTS §Perf iter 6).  Placing this
+    at block outputs pins the inter-layer cotangent to bf16.
+    """
+    return _gdb(x, str(x.dtype))
+
+
+def linear(x: Array, p, bias: Optional[Array] = None) -> Array:
+    """Apply a (possibly packed) linear map.  ``p`` is an Array or LRPack."""
+    if isinstance(p, LRPack):
+        y = lowrank_matmul(x, p.w, p.b, p.v)
+    else:
+        y = x @ p
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def weight_of(p) -> Array:
+    """The base weight regardless of packing (for shape queries)."""
+    return p.w if isinstance(p, LRPack) else p
+
+
+def effective_weight(p) -> Array:
+    """Materialised W + V B^T (used by serve paths / outer merges)."""
+    if isinstance(p, LRPack):
+        return (p.w.astype(jnp.float32) +
+                p.v.astype(jnp.float32) @ p.b.astype(jnp.float32).T
+                ).astype(p.w.dtype)
+    return p
+
+
+def pack_tree(params, lowrank):
+    """Zip a param tree with a same-structure lowrank tree.
+
+    ``lowrank`` leaves are either ``None`` (dense leaf — passes through) or a
+    dict ``{"b": (n_out,r), "v": (k,r)}``.
+    """
+    def pack(lr, w):
+        if lr is None:
+            return w
+        return LRPack(w, lr["b"], lr["v"])
+
+    # lowrank is the *first* tree so is_leaf can stop descent at None /
+    # {"b","v"} nodes; params is flattened up-to that structure.
+    return jax.tree.map(pack, lowrank, params,
+                        is_leaf=lambda t: t is None or
+                        (isinstance(t, dict) and set(t) == {"b", "v"}))

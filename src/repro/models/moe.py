@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN with fixed-capacity sort-based dispatch.
+
+Design targets (deepseek-v2 / qwen3-moe cells at mesh (pod, data, model)):
+
+* expert weights are stacked ``(E, ...)`` and sharded over the ``model``
+  axis (expert parallelism);
+* dispatch is index-based (argsort + gather/scatter), never materialising a
+  ``(tokens, E, capacity)`` one-hot — the dense-dispatch einsum of GShard is
+  O(T*E*C) memory which does not fit at 32k contexts;
+* fixed capacity C = ceil(cf * T * k / E) keeps every shape static
+  (SPMD-friendly); overflow tokens are dropped from the expert but their
+  residual stream passes through (standard Switch semantics);
+* FLOPs scale with *active* parameters (E*C*d*f ~ cf * T * k * d * f), so
+  the roofline's MoE MODEL_FLOPS uses 6 * N_active * D as assigned.
+
+All matmul weights flow through :func:`linear` so the low-rank estimator
+applies to expert FFNs too (per-expert B with a shared per-layer V — see
+optim.subspace).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .linear import linear, weight_of
+from ..sharding.ctx import constrain
+
+Array = jax.Array
+
+
+def _capacity(tokens: int, k: int, n_experts: int, cf: float) -> int:
+    c = int(-(-tokens * k * cf // n_experts))  # ceil
+    return max(4, -(-c // 4) * 4)              # pad to multiple of 4
+
+
+def moe_ffn(x: Array, router_w, w_gate, w_up, w_down, *,
+            top_k: int, capacity_factor: float = 1.25,
+            norm_topk: bool = True, router_dtype=jnp.float32,
+            groups: int = 1):
+    """Top-k routed expert FFN.
+
+    x: (B, S, d); router_w: (d, E); w_gate/w_up: (E, d, f) [possibly LRPack
+    per-expert]; w_down: (E, f, d).
+    Returns (y (B,S,d), aux) with aux = {"lb_loss", "router_z"}.
+
+    ``groups`` partitions the token dimension into independent dispatch
+    groups with per-group capacity.  Setting groups == number of
+    data-parallel shards makes every gather/scatter *local* to its shard
+    under GSPMD (no global token all-gather) — the distribution-critical
+    knob for the 32k-context MoE cells.
+    """
+    B, S, d = x.shape
+    T = B * S
+    if groups > 1 and T % groups == 0:
+        xg = constrain(x.reshape(groups, T // groups, 1, d),
+                       "batch", None, None, None)
+        yg, aux = jax.vmap(
+            lambda xx: moe_ffn(xx, router_w, w_gate, w_up, w_down,
+                               top_k=top_k, capacity_factor=capacity_factor,
+                               norm_topk=norm_topk,
+                               router_dtype=router_dtype, groups=1))(xg)
+        aux = jax.tree.map(lambda a: jnp.mean(a), aux)
+        return yg.reshape(B, S, d), aux
+    E = weight_of(router_w).shape[-1]
+    k = top_k
+    C = _capacity(T, k, E, capacity_factor)
+
+    xf = x.reshape(T, d)
+    logits = linear(xf.astype(router_dtype),
+                    jax.tree.map(lambda a: a.astype(router_dtype), router_w)
+                    if not isinstance(router_w, jax.Array)
+                    else router_w.astype(router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_w, top_idx = jax.lax.top_k(probs, k)                     # (T, k)
+    if norm_topk:
+        top_w = top_w / jnp.maximum(
+            jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # ---- assignment: position of each (token, slot) inside its expert ----
+    flat_e = top_idx.reshape(-1)                                  # (T*k,)
+    tok_id = jnp.arange(T * k, dtype=jnp.int32) // k              # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    grp_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(T * k, dtype=jnp.int32) - grp_start[sorted_e]
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < C
+
+    # ---- (E, C) token-index table; sentinel T -> zero row ----
+    table = jnp.full((E, C), T, jnp.int32)
+    table = table.at[flat_e, jnp.where(keep, pos, C)].set(
+        tok_id, mode="drop")                                      # OOB dropped
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    gathered = jnp.take(x_pad, table, axis=0)                     # (E, C, d)
+
+    # ---- expert FFN (swiglu), batched over E ----
+    def expert_mm(h, w):
+        if isinstance(w, jax.Array):
+            return jnp.einsum("ecd,edf->ecf", h, w)
+        # LRPack with per-expert stacked b/v: y = h w + (h v) b^T
+        p = jnp.einsum("ecd,edr->ecr", h, w.v)
+        return jnp.einsum("ecd,edf->ecf", h, w.w) + \
+            jnp.einsum("ecr,efr->ecf", p, w.b)
+
+    g = expert_mm(gathered, w_gate)
+    u = expert_mm(gathered, w_up)
+    h = jax.nn.silu(g) * u
+    y_e = expert_mm(h, w_down)                                    # (E, C, d)
+
+    # ---- combine: gather back per (token, slot), weight, sum over k ----
+    val = y_e[flat_e, jnp.where(keep, pos, 0)]                    # (T*k, d)
+    val = jnp.where(keep[:, None], val, 0.0)
+    val = val * top_w.reshape(-1)[:, None].astype(val.dtype)
+    y = val.reshape(T, k, d).sum(axis=1)
+
+    # ---- load-balance aux (Switch): E * sum_e f_e * p_e ----
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[flat_e].add(
+        jnp.where(keep, 1.0, 0.0)) / jnp.maximum(T * k, 1)
+    lb_loss = E * jnp.sum(me * ce)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y.reshape(B, S, d).astype(x.dtype), {
+        "lb_loss": lb_loss, "router_z": router_z}

@@ -1,0 +1,248 @@
+"""Mamba2 — SSD (state-space duality) blocks, TPU-adapted.
+
+The chunked SSD form maps the recurrence
+
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * B_t x_t^T ,   y_t = C_t h_t + D x_t
+
+onto MXU-friendly matmuls: within a chunk of Q tokens the contribution is a
+masked quadratic "attention" (scores = (C_i . B_j) * decay(i,j) * dt_j);
+across chunks a small (H, N, P) state is carried by a ``lax.scan``.  This is
+the hardware adaptation of the CUDA SSD kernel described in DESIGN.md §3.
+
+Single-token decode keeps O(1) state: (B, H, N, P) SSM state + a (k-1)-deep
+causal-conv ring buffer — which is why mamba2/zamba2 own the ``long_500k``
+cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm
+from .linear import linear
+from ..sharding.ctx import constrain
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state for one stack of Mamba2 layers."""
+    ssm: Array    # (L, B, H, N, P) f32
+    conv: Array   # (L, B, K-1, conv_channels)
+
+    @staticmethod
+    def abstract(layers, batch, heads, state, head_dim, conv_k, conv_ch,
+                 dtype=jnp.float32):
+        return SSMState(
+            ssm=jax.ShapeDtypeStruct((layers, batch, heads, state, head_dim),
+                                     jnp.float32),
+            conv=jax.ShapeDtypeStruct((layers, batch, conv_k - 1, conv_ch),
+                                      dtype))
+
+    @staticmethod
+    def alloc(layers, batch, heads, state, head_dim, conv_k, conv_ch,
+              dtype=jnp.float32):
+        return SSMState(
+            ssm=jnp.zeros((layers, batch, heads, state, head_dim),
+                          jnp.float32),
+            conv=jnp.zeros((layers, batch, conv_k - 1, conv_ch), dtype))
+
+
+def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv.  x: (B, S, Ch); w: (K, Ch); b: (Ch,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum_k x[t - (K-1) + k] * w[k]
+    out = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    return out + b
+
+
+def causal_conv1d_step(x_new: Array, conv_state: Array, w: Array, b: Array):
+    """One-token conv update. x_new: (B, Ch); conv_state: (B, K-1, Ch)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,Ch)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    new_state = window[:, 1:, :]
+    return out, new_state
+
+
+def _segsum_decay(da: Array) -> Array:
+    """L[..., i, j] = exp(sum_{j<s<=i} da_s) for i>=j else 0.
+
+    da: (..., Q).  Returns (..., Q, Q) f32.
+    """
+    Q = da.shape[-1]
+    clog = jnp.cumsum(da, axis=-1)                       # inclusive
+    diff = clog[..., :, None] - clog[..., None, :]       # i row, j col
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                d_skip: Array, chunk: int = 128,
+                init_state: Optional[Array] = None,
+                return_state: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P) f32; dt: (B, S, H) f32 (already softplus'd, >0);
+    a_log: (H,) — A = -exp(a_log); b, c: (B, S, G, N); d_skip: (H,).
+    Returns y (B, S, H, P) [+ final state (B, H, N, P)].
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[-2], b.shape[-1]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))              # (H,) negative
+    da = dt * a                                          # (B, S, H) log-decay
+    # broadcast groups -> heads
+    bh = jnp.repeat(b, rep, axis=2) if rep > 1 else b    # (B, S, H, N)
+    ch = jnp.repeat(c, rep, axis=2) if rep > 1 else c
+
+    # chunked views
+    xr = x.reshape(B, nc, Q, H, P)
+    dtr = dt.reshape(B, nc, Q, H)
+    dar = da.reshape(B, nc, Q, H)
+    br = bh.reshape(B, nc, Q, H, N)
+    cr = ch.reshape(B, nc, Q, H, N)
+
+    clog = jnp.cumsum(dar, axis=2)                       # (B, nc, Q, H)
+    ctot = clog[:, :, -1, :]                             # (B, nc, H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    def intra(xc, dtc, dac, bc, cc):
+        # shapes: (B, Q, H, *) for one chunk
+        L = _segsum_decay(dac.transpose(0, 2, 1))        # (B, H, Q, Q)
+        s = jnp.einsum("bihn,bjhn->bhij", cc, bc,
+                       preferred_element_type=jnp.float32)
+        att = s * L * dtc.transpose(0, 2, 1)[:, :, None, :]   # * dt_j
+        return jnp.einsum("bhij,bjhp->bihp", att, xc,
+                          preferred_element_type=jnp.float32)
+
+    y_intra = jax.vmap(jax.checkpoint(intra), in_axes=1, out_axes=1)(
+        xr, dtr, dar, br, cr)                            # (B, nc, Q, H, P)
+
+    # ---- inter-chunk state recurrence ----
+    # local chunk state: sum_j exp(ctot - clog_j) dt_j B_j x_j^T
+    wj = jnp.exp(ctot[:, :, None, :] - clog) * dtr       # (B, nc, Q, H)
+    s_local = jnp.einsum("bcqhn,bcqhp,bcqh->bchnp", br, xr, wj,
+                         preferred_element_type=jnp.float32)
+    decay_chunk = jnp.exp(ctot)                          # (B, nc, H)
+
+    def state_step(s_prev, inp):
+        dec, s_loc = inp                                 # (B,H), (B,H,N,P)
+        s_in = s_prev                                    # state before chunk
+        s_out = dec[..., None, None] * s_prev + s_loc
+        return s_out, s_in
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, N, P), jnp.float32))
+    s_final, s_in_per_chunk = jax.lax.scan(
+        state_step, s0,
+        (decay_chunk.transpose(1, 0, 2), s_local.transpose(1, 0, 2, 3, 4)))
+    s_in = s_in_per_chunk.transpose(1, 0, 2, 3, 4)       # (B, nc, H, N, P)
+
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", cr, jnp.exp(clog), s_in,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P) + \
+        x * d_skip[None, None, :, None]
+    if return_state:
+        return y, s_final
+    return y
+
+
+def ssd_decode_step(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                    d_skip: Array, state: Array):
+    """One-token SSD update.
+
+    x: (B, H, P); dt: (B, H); b, c: (B, G, N); state: (B, H, N, P) f32.
+    """
+    B, H, P = x.shape
+    G, N = b.shape[-2], b.shape[-1]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=1) if rep > 1 else b    # (B, H, N)
+    ch = jnp.repeat(c, rep, axis=1) if rep > 1 else c
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dec = jnp.exp(dt * a)                                # (B, H)
+    new_state = dec[..., None, None] * state + \
+        jnp.einsum("bhn,bhp,bh->bhnp", bh, x, dt,
+                   preferred_element_type=jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_state,
+                   preferred_element_type=jnp.float32) + \
+        x * d_skip[None, :, None]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba2_mixer(h: Array, p: dict, cfg, *,
+                 ssm_state: Optional[Array] = None,
+                 conv_state: Optional[Array] = None,
+                 decode: bool = False,
+                 want_state: bool = False):
+    """Apply one Mamba2 mixer.
+
+    h: (B, S, d) (S == 1 when decode).  ``p`` keys: in_proj, conv_w, conv_b,
+    a_log, d_skip, dt_bias, norm, out_proj.
+    Returns (out, (new_ssm_state, new_conv_state)) — states are None-passthru
+    when not decoding.
+    """
+    B, S, d = h.shape
+    d_in = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    G = max(1, getattr(cfg, "ssm_groups", 1))
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * G * N
+
+    zxbcdt = constrain(linear(h, p["in_proj"]), "batch", None, "tp")
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_in, d_in + conv_ch], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+
+    if decode:
+        xbc_c, new_conv = causal_conv1d_step(
+            xbc[:, 0, :], conv_state, p["conv_w"], p["conv_b"])
+        xbc_c = xbc_c[:, None, :]
+    else:
+        xbc_c = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+        if want_state:
+            K = cfg.ssm_conv_dim
+            pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+            new_conv = pad[:, -(K - 1):, :]
+        else:
+            new_conv = None
+    xbc_c = jax.nn.silu(xbc_c)
+    x, bmat, cmat = jnp.split(xbc_c, [d_in, d_in + G * N], axis=-1)
+    x = constrain(x.reshape(B, S, H, P).astype(jnp.float32),
+                  "batch", None, "tp", None)
+    bmat = bmat.reshape(B, S, G, N).astype(jnp.float32)
+    cmat = cmat.reshape(B, S, G, N).astype(jnp.float32)
+
+    if decode:
+        y, new_ssm = ssd_decode_step(
+            x[:, 0], dt[:, 0], p["a_log"], bmat[:, 0], cmat[:, 0],
+            p["d_skip"], ssm_state)
+        y = y[:, None]
+    elif want_state:
+        y, new_ssm = ssd_chunked(x, dt, p["a_log"], bmat, cmat, p["d_skip"],
+                                 chunk=getattr(cfg, "ssd_chunk", 128),
+                                 return_state=True)
+    else:
+        y = ssd_chunked(x, dt, p["a_log"], bmat, cmat, p["d_skip"],
+                        chunk=getattr(cfg, "ssd_chunk", 128))
+        new_ssm = None
+
+    y = constrain(y.reshape(B, S, d_in).astype(h.dtype),
+                  "batch", None, "tp")
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = constrain(linear(y, p["out_proj"]), "batch", "sp", None)
+    return out, (new_ssm, new_conv)

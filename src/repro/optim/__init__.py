@@ -1,0 +1,3 @@
+"""Optimizers: dense AdamW baseline, LowRankLazyAdam (Alg. 1, IPA family),
+LowRank-LR/ZO trainer (forward-only), LR schedules."""
+from . import adamw, galore, schedule, subspace, zo  # noqa: F401

@@ -1,0 +1,67 @@
+"""Dense AdamW — the Vanilla-IPA baseline (full backprop, full moments).
+
+Pytree-generic, fp32 moments, decoupled weight decay, global-norm clip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    m: object
+    v: object
+    step: Array
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    if not max_norm:
+        return tree, jnp.zeros(())
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), gn
+
+
+def update(grads, state: AdamWState, params, *, lr, beta1=0.9, beta2=0.999,
+           eps=1e-8, weight_decay=0.0, grad_clip=0.0):
+    grads, gn = clip_by_global_norm(grads, grad_clip)
+    step = state.step + 1
+    bc1 = 1.0 - beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * g * g
+        mh, vh = m / bc1, v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    res = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [r[0] for r in res])
+    new_m = jax.tree.unflatten(treedef, [r[1] for r in res])
+    new_v = jax.tree.unflatten(treedef, [r[2] for r in res])
+    return new_p, AdamWState(new_m, new_v, step), gn

@@ -1,0 +1,132 @@
+"""GaLore-style projected-gradient baseline (Zhao et al., 2024).
+
+The paper positions its estimator against GaLore: GaLore computes the FULL
+gradient by backprop, then projects onto the top-r singular subspace (SVD
+refreshed every K steps) and runs Adam in the subspace.  Memory: optimizer
+states are (n x r) like ours, but the full (k x n) gradient IS materialised
+every step and full activations ARE stored — so it saves optimizer memory
+only, not gradient-estimation memory (the paper's Section 2 critique,
+which this implementation makes measurable: see benchmarks/memory_table).
+
+Shares the SubspaceState machinery; the projector is data-dependent
+(top-r left singular vectors of the latest full gradient) instead of a
+random admissible law — NOT unbiased in the paper's sense (Definition 3
+isotropy does not hold), which is exactly the theoretical gap the paper's
+random projectors close.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import clip_by_global_norm
+from .subspace import (DenseSlot, LowRankSlot, SubspaceState, _is_slot,
+                       _rank_for)
+
+Array = jax.Array
+
+
+def init(params, tcfg, key: Array) -> SubspaceState:
+    """Same slot layout as LowRankLazyAdam; V starts as zeros (first
+    refresh fills it from the first gradient)."""
+    from . import subspace
+    state = subspace.init(params, tcfg, key)
+    # zero the projections: galore refreshes them from gradient SVD
+    flat, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
+    flat = [s._replace(proj=jnp.zeros_like(s.proj))
+            if isinstance(s, LowRankSlot) else s for s in flat]
+    return state._replace(slots=jax.tree.unflatten(treedef, flat))
+
+
+def _top_r_basis(g: Array, r: int) -> Array:
+    """Top-r right singular vectors of g (k x n) -> (k, r) basis.
+
+    Computed via eigh of the (k x k)... we need the basis of the k-dim
+    (input) side to match our V (k, r) convention: svd of g gives
+    g = U S W^T with U (k, k); top-r columns of U span the projection.
+    Uses eigh(g g^T) — O(k^2 n + k^3), run once per refresh interval.
+    """
+    gram = (g @ g.T).astype(jnp.float32)
+    _, vecs = jnp.linalg.eigh(gram)             # ascending
+    return vecs[:, -r:]                          # (k, r)
+
+
+def value_and_full_grads(loss_fn, params, batch):
+    """GaLore's step 1: classical full backprop (the memory cost)."""
+    return jax.value_and_grad(loss_fn)(params, batch)
+
+
+def update(full_grads, params, state: SubspaceState, *, lr, tcfg,
+           refresh: bool) -> Tuple[Any, SubspaceState]:
+    """Adam on the projected gradient; lift the update back to W.
+
+    GaLore updates W directly every step (no lazy B accumulation):
+      R = U^T G ;  Adam(R) -> delta ;  W -= lr * U @ delta.
+    """
+    full_grads, _ = clip_by_global_norm(full_grads, tcfg.grad_clip)
+    step = state.step + 1
+    b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat_slots, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
+    flat_p = treedef.flatten_up_to(params)
+    flat_g = treedef.flatten_up_to(full_grads)
+    new_p, new_s = [], []
+    for slot, p, g in zip(flat_slots, flat_p, flat_g):
+        g32 = g.astype(jnp.float32)
+        if isinstance(slot, LowRankSlot):
+            r = slot.proj.shape[-1]
+            if slot.proj.ndim == 2:
+                proj = jax.lax.cond(
+                    refresh, lambda gg: _top_r_basis(gg, r),
+                    lambda gg: slot.proj, g32) if isinstance(refresh, jax.Array) \
+                    else (_top_r_basis(g32, r) if refresh else slot.proj)
+            else:  # stacked (L[,E], k, n): vmap the basis refresh
+                fn = _top_r_basis
+                for _ in range(slot.proj.ndim - 2):
+                    fn = jax.vmap(fn, in_axes=(0, None))
+                proj = fn(g32, r) if refresh else slot.proj
+            # project: R = U^T G  -> (n, r) convention: (g^T u)
+            rproj = jnp.einsum("...kn,...kr->...nr", g32, proj)
+            m = b1 * slot.m + (1 - b1) * rproj
+            v = b2 * slot.v + (1 - b2) * rproj * rproj
+            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            lifted = jnp.einsum("...kr,...nr->...kn", proj, delta)
+            if tcfg.weight_decay:
+                lifted = lifted + tcfg.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * lifted
+                          ).astype(p.dtype))
+            new_s.append(LowRankSlot(proj=proj, b=slot.b, m=m, v=v,
+                                     energy=slot.energy))
+        else:
+            m = b1 * slot.m + (1 - b1) * g32
+            v = b2 * slot.v + (1 - b2) * g32 * g32
+            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if tcfg.weight_decay and p.ndim >= 2:
+                delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * delta
+                          ).astype(p.dtype))
+            new_s.append(DenseSlot(m, v))
+    return (jax.tree.unflatten(treedef, new_p),
+            SubspaceState(jax.tree.unflatten(treedef, new_s), step,
+                          state.outer_step, state.key))
+
+
+def make_train_step(cfg, tcfg, loss_fn=None):
+    """jit-able GaLore step; ``refresh`` decided by step % lazy_k outside
+    jit would retrace — we pass it as a traced bool via lax.cond-free
+    branch on the python side (two jitted variants is simplest)."""
+    from ..train import steps as steps_mod
+    loss_fn = loss_fn or steps_mod.build_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch, refresh: bool):
+        lr = steps_mod._lr_at(tcfg, opt_state.step)
+        loss, grads = value_and_full_grads(loss_fn, params, batch)
+        new_p, new_s = update(grads, params, opt_state, lr=lr, tcfg=tcfg,
+                              refresh=refresh)
+        return new_p, new_s, {"loss": loss}
+
+    return train_step

@@ -1,0 +1,21 @@
+"""LR schedules (paper: cosine annealing with linear warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, base_lr: float, warmup_steps: int,
+                       total_steps: int, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+    frac = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+def constant(step, *, base_lr: float, **_):
+    return jnp.full((), base_lr, jnp.float32)
+
+
+SCHEDULES = {"cosine": cosine_with_warmup, "constant": constant}

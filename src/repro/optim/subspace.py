@@ -1,0 +1,292 @@
+"""LowRankLazyAdam — the paper's Algorithm 1 as a production optimizer.
+
+Two-level structure:
+  * INNER step (hot loop, runs K times per outer iteration): Adam on the
+    subspace variables ``B in R^{n_out x r}`` of every low-rank leaf plus
+    dense Adam on everything else (norm scales, biases, routers, SSM
+    scalars).  Gradients w.r.t. B are produced by autodiff through the
+    LRPack path of :mod:`repro.models.linear` — the full ``k x n_out``
+    gradient is never materialised, and the DP all-reduce carries ``n_out*r``
+    floats instead of ``k*n_out``.
+  * OUTER step (every K steps): merge ``W += V B^T`` in fp32, resample V
+    (stiefel / coordinate / gaussian / dependent_diag per Section 5),
+    zero B, reset (or project) the subspace moments.
+
+Leaf classification:
+  * 2-D weights with min(dim) >= min_dim_for_lowrank and not name-excluded
+    -> LowRankSlot; convention W (k, n_out): V (k, r), B (n_out, r),
+    effective weight W + V B^T.
+  * 3-D stacked expert weights (E, k, n_out) -> per-expert V (E, k, r),
+    B (E, n_out, r) (vmapped sampler).
+  * everything else -> DenseSlot (plain AdamW).
+
+For ``dependent_diag`` (the LLM-scale instance-dependent mode of DESIGN.md
+§7.4) each low-rank slot carries an EMA estimate of diag(Sigma) over the
+input dimension, updated from subspace gradients at O(k r^2) cost:
+  diag(V dB^T dB V^T)_i = ((V M) * V).sum(-1),  M = dB^T dB.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import samplers
+from ..models.linear import LRPack
+from .adamw import clip_by_global_norm
+
+Array = jax.Array
+
+EXCLUDE_DEFAULT = r"(/embed/|/tok$|/pos$|router|conv_w)"
+
+
+class DenseSlot(NamedTuple):
+    m: Array
+    v: Array
+
+
+class LowRankSlot(NamedTuple):
+    proj: Array       # V: (k, r) or (E, k, r) — fixed within an outer iter
+    b: Array          # (n_out, r) or (E, n_out, r), fp32
+    m: Array          # Adam moments over b
+    v: Array
+    energy: Array     # (k,) EMA of diag(Sigma) (dependent_diag) or (0,)
+
+
+class SubspaceState(NamedTuple):
+    slots: Any        # tree matching params; leaves DenseSlot | LowRankSlot
+    step: Array
+    outer_step: Array
+    key: Array
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/" + "/".join(out)
+
+
+def is_lowrank_leaf(path: str, x, tcfg) -> bool:
+    if re.search(getattr(tcfg, "lowrank_exclude", EXCLUDE_DEFAULT), path):
+        return False
+    if x.ndim == 2:
+        return min(x.shape) >= tcfg.min_dim_for_lowrank
+    if x.ndim == 3:  # stacked experts (E, k, n_out)
+        return min(x.shape[1:]) >= tcfg.min_dim_for_lowrank
+    if x.ndim == 4:  # scan-stacked experts (L, E, k, n_out)
+        return min(x.shape[2:]) >= tcfg.min_dim_for_lowrank
+    return False
+
+
+def _rank_for(shape, tcfg) -> int:
+    k, n_out = shape[-2], shape[-1]
+    return max(1, min(tcfg.rank, min(k, n_out) // 2))
+
+
+def _sample_v(name, key, k_dim, r, c, energy=None, dtype=jnp.float32):
+    if name == "dependent_diag":
+        e = jnp.where(jnp.sum(energy) > 0, energy,
+                      jnp.ones_like(energy))  # warm-up: uniform == coordinate
+        return samplers.dependent_diagonal(key, e, r, c=c, dtype=dtype)
+    return samplers.sample_v(name, key, k_dim, r, c=c, dtype=dtype)
+
+
+def _sample_proj(name, key, shape, r, c, energy, dtype=jnp.float32):
+    """V for a (k, n_out) leaf or per-expert for stacked leading dims."""
+    lead = shape[:-2]
+    k_dim = shape[-2]
+    if not lead:
+        return _sample_v(name, key, k_dim, r, c, energy, dtype)
+    n = 1
+    for d in lead:
+        n *= d
+    keys = jax.random.split(key, n)
+    if name == "dependent_diag":
+        vs = jax.vmap(lambda kk: _sample_v(name, kk, k_dim, r, c, energy,
+                                           dtype))(keys)
+    else:
+        vs = jax.vmap(lambda kk: _sample_v(name, kk, k_dim, r, c, None,
+                                           dtype))(keys)
+    return vs.reshape(lead + (k_dim, r))
+
+
+def init(params, tcfg, key: Array) -> SubspaceState:
+    """Classify leaves, sample initial projections, zero moments."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    keys = jax.random.split(key, len(leaves) + 1)
+    slot_leaves = []
+    for i, (path, x) in enumerate(leaves):
+        ps = _path_str(path)
+        if is_lowrank_leaf(ps, x, tcfg):
+            r = _rank_for(x.shape, tcfg)
+            lead = x.shape[:-2]
+            k_dim, n_out = x.shape[-2], x.shape[-1]
+            energy = jnp.zeros((k_dim,), jnp.float32) if \
+                tcfg.sampler == "dependent_diag" else jnp.zeros((0,))
+            proj = _sample_proj(tcfg.sampler, keys[i], x.shape, r, tcfg.c,
+                                energy)
+            b = jnp.zeros(lead + (n_out, r), jnp.float32)
+            slot_leaves.append(LowRankSlot(
+                proj=proj, b=b, m=jnp.zeros_like(b), v=jnp.zeros_like(b),
+                energy=energy))
+        else:
+            slot_leaves.append(DenseSlot(
+                m=jnp.zeros(x.shape, jnp.float32),
+                v=jnp.zeros(x.shape, jnp.float32)))
+    slots = jax.tree.unflatten(treedef, slot_leaves)
+    return SubspaceState(slots=slots, step=jnp.zeros((), jnp.int32),
+                         outer_step=jnp.zeros((), jnp.int32), key=keys[-1])
+
+
+# ---------------------------------------------------------------------------
+# Packing and trainable extraction
+# ---------------------------------------------------------------------------
+
+def _is_slot(x):
+    return isinstance(x, (DenseSlot, LowRankSlot))
+
+
+def trainable_of(params, state: SubspaceState):
+    """The differentiation tree: B for low-rank leaves, W for dense ones."""
+    return jax.tree.map(
+        lambda slot, p: slot.b if isinstance(slot, LowRankSlot) else p,
+        state.slots, params, is_leaf=_is_slot)
+
+
+def packed_params(params, state: SubspaceState, trainable, dtype=None):
+    """Model-facing tree: LRPack(w, b, v) at low-rank leaves, the trainable
+    value at dense leaves."""
+    def pack(slot, p, t):
+        if isinstance(slot, LowRankSlot):
+            cast = (lambda x: x.astype(dtype)) if dtype else (lambda x: x)
+            return LRPack(p, cast(t), cast(slot.proj))
+        return t
+    return jax.tree.map(pack, state.slots, params, trainable,
+                        is_leaf=_is_slot)
+
+
+# ---------------------------------------------------------------------------
+# Inner step (Algorithm 1, lines 5-6) — Adam over (B, dense) trainables
+# ---------------------------------------------------------------------------
+
+def inner_update(grads, trainable, params, state: SubspaceState, *,
+                 lr, tcfg) -> Tuple[Any, Any, SubspaceState, Array]:
+    """One Adam step on the trainable tree.
+
+    Returns (new_params, new_trainable, new_state, grad_norm).  Dense leaf
+    updates land in params; low-rank updates land in slots' B.
+    """
+    grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
+    step = state.step + 1
+    b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(slot, p, t, g):
+        g32 = g.astype(jnp.float32)
+        if isinstance(slot, LowRankSlot):
+            m = b1 * slot.m + (1 - b1) * g32
+            v = b2 * slot.v + (1 - b2) * g32 * g32
+            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            # weight decay acts on the *effective* weight via the outer
+            # merge; inside the subspace we decay B directly (equivalent to
+            # decaying the increment — standard in GaLore-style training).
+            if tcfg.weight_decay:
+                delta = delta + tcfg.weight_decay * t
+            new_b = t - lr * delta
+            new_energy = slot.energy
+            if slot.energy.size:  # dependent_diag: EMA of diag(Sigma)
+                mm = jnp.einsum("...nr,...ns->...rs", g32, g32)
+                e = jnp.einsum("...kr,...rs,...ks->...k", slot.proj, mm,
+                               slot.proj)
+                if e.ndim > 1:  # stacked experts: average
+                    e = e.mean(axis=tuple(range(e.ndim - 1)))
+                new_energy = 0.99 * slot.energy + 0.01 * e
+            return (p, new_b,
+                    LowRankSlot(slot.proj, new_b, m, v, new_energy))
+        m = b1 * slot.m + (1 - b1) * g32
+        v = b2 * slot.v + (1 - b2) * g32 * g32
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if tcfg.weight_decay and p.ndim >= 2:
+            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return (new_p, new_p, DenseSlot(m, v))
+
+    flat_slots, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
+    flat_p = treedef.flatten_up_to(params)
+    flat_t = treedef.flatten_up_to(trainable)
+    flat_g = treedef.flatten_up_to(grads)
+    res = [upd(s, p, t, g) for s, p, t, g in
+           zip(flat_slots, flat_p, flat_t, flat_g)]
+    new_params = jax.tree.unflatten(treedef, [r[0] for r in res])
+    new_trainable = jax.tree.unflatten(treedef, [r[1] for r in res])
+    new_slots = jax.tree.unflatten(treedef, [r[2] for r in res])
+    return new_params, new_trainable, SubspaceState(
+        new_slots, step, state.outer_step, state.key), gn
+
+
+# ---------------------------------------------------------------------------
+# Outer step (Algorithm 1, lines 3 & 8) — merge + resample
+# ---------------------------------------------------------------------------
+
+def outer_merge_resample(params, state: SubspaceState, tcfg):
+    """W += V B^T (fp32 accumulate), resample V, zero B (+ moments)."""
+    nkey, skey = jax.random.split(state.key)
+    flat_slots, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
+    flat_p = treedef.flatten_up_to(params)
+    keys = jax.random.split(skey, max(len(flat_slots), 1))
+    new_p, new_s = [], []
+    for i, (slot, p) in enumerate(zip(flat_slots, flat_p)):
+        if not isinstance(slot, LowRankSlot):
+            new_p.append(p)
+            new_s.append(slot)
+            continue
+        delta = jnp.einsum("...kr,...nr->...kn", slot.proj,
+                           slot.b).astype(jnp.float32)
+        merged = (p.astype(jnp.float32) + delta).astype(p.dtype)
+        r = slot.proj.shape[-1]
+        proj = _sample_proj(tcfg.sampler, keys[i], p.shape, r, tcfg.c,
+                            slot.energy)
+        b = jnp.zeros_like(slot.b)
+        if tcfg.reset_moments:
+            m, v = jnp.zeros_like(b), jnp.zeros_like(b)
+        else:
+            m, v = slot.m, slot.v  # beyond-paper: carry moments across V
+        new_p.append(merged)
+        new_s.append(LowRankSlot(proj, b, m, v, slot.energy))
+    return (jax.tree.unflatten(treedef, new_p),
+            SubspaceState(jax.tree.unflatten(treedef, new_s),
+                          state.step, state.outer_step + 1, nkey))
+
+
+def lowrank_param_count(params, tcfg) -> dict:
+    """Memory accounting: optimizer-state floats for lowrank vs dense Adam."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    full = sum(int(jnp.size(x)) for _, x in leaves)
+    lowrank_states = 0
+    proj_states = 0
+    dense_states = 0
+    for path, x in leaves:
+        ps = _path_str(path)
+        if is_lowrank_leaf(ps, x, tcfg):
+            r = _rank_for(x.shape, tcfg)
+            lead = 1
+            for d in x.shape[:-2]:
+                lead *= d
+            lowrank_states += lead * x.shape[-1] * r  # B (and its moments)
+            proj_states += lead * x.shape[-2] * r     # V
+        else:
+            dense_states += int(jnp.size(x))
+    return {"param_count": full,
+            "b_count": lowrank_states,
+            "v_count": proj_states,
+            "dense_count": dense_states,
+            "adam_state_full": 2 * full,
+            "adam_state_lowrank": 2 * (lowrank_states + dense_states)}

@@ -1,0 +1,2 @@
+from .rules import (LOGICAL_TO_MESH, param_pspecs, slot_pspecs,
+                    named_shardings, batch_pspec)  # noqa: F401

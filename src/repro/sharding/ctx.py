@@ -1,0 +1,83 @@
+"""Ambient sharding context for activation constraints.
+
+GSPMD's sharding propagation needs anchors inside big programs: without
+them it happily replicates activations across the ``model`` axis (16x
+redundant compute) or un-shards the batch.  Models call
+``constrain(x, "batch", None, "tp")`` at the canonical points (embeddings,
+block outputs, attention heads, MLP/MoE intermediates, logits chunks);
+when no mesh is active (CPU unit tests) this is a no-op, so model code is
+mesh-agnostic.
+
+Logical activation axes:
+  batch -> ("pod", "data")   (falls back to "data", then replicate)
+  tp    -> "model"
+  fsdp  -> "data"
+Divisibility is checked against the actual dim; non-divisible -> replicate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+AXIS_MAP = {
+    "batch": (("pod", "data"), ("data",)),
+    "tp": (("model",),),
+    "sp": (("model",),),   # sequence parallelism (Megatron-SP residuals)
+    "fsdp": (("data",),),
+    "seq": (("data",),),
+}
+
+
+def divisible(logical: str, size: int) -> bool:
+    """True iff `size` divides the mesh extent of the logical axis."""
+    if _MESH is None:
+        return False
+    for cand in AXIS_MAP.get(logical, ()):
+        axes = tuple(a for a in cand if a in _MESH.shape)
+        if not axes:
+            continue
+        ext = 1
+        for a in axes:
+            ext *= _MESH.shape[a]
+        return size % ext == 0 and ext > 1
+    return False
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def _resolve(logical: Optional[str], size: int, used: set):
+    if logical is None or _MESH is None:
+        return None
+    for cand in AXIS_MAP.get(logical, ()):
+        axes = tuple(a for a in cand if a in _MESH.shape)
+        if not axes or any(a in used for a in axes):
+            continue
+        ext = 1
+        for a in axes:
+            ext *= _MESH.shape[a]
+        if size % ext == 0 and ext > 1:
+            used.update(axes)
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def constrain(x: jax.Array, *logical):
+    """with_sharding_constraint under the ambient mesh (no-op if none)."""
+    if _MESH is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    used: set = set()
+    parts = [_resolve(l, s, used) for l, s in zip(logical, x.shape)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*parts)))

@@ -1,0 +1,132 @@
+"""Logical-axis -> mesh-axis sharding rules (DP x TP (+pod) posture).
+
+Megatron-style tensor parallelism over ``model`` (heads / ffn / vocab /
+experts / ssm-inner), FSDP weight sharding over ``data`` (the d_model axis
+of every matrix), batch over ``(pod, data)``.  The low-rank subspace states
+follow their weight: V shards like the weight's input axis, B like the
+output axis, rank replicated — so neither packing (W, B, V) -> LRPack nor
+the outer merge W += V B^T needs any resharding.
+
+Every rule is divisibility-checked against the mesh; a dim that does not
+divide falls back to replication for that axis (logged) instead of relying
+on GSPMD padding — compile-safe for every assigned architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import ParamSpec
+from ..optim import subspace
+
+# logical axis -> preferred mesh axis (None = replicate)
+LOGICAL_TO_MESH = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "moe_ffn": None,          # expert-internal width stays local
+    "expert": "model",        # expert parallelism
+    "ssm_inner": "model",
+    "q_lora": "model",
+    "kv_lora": "model",
+    "embed": "data",          # FSDP: shard d_model of every matrix over data
+    "layers": None,
+    None: None,
+}
+
+BATCH_AXES = ("pod", "data")  # batch shards over both at multi-pod
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _resolve(mesh: Mesh, dim_size: int, logical: Optional[str],
+             used: set) -> Optional[str]:
+    want = LOGICAL_TO_MESH.get(logical)
+    if want is None or want not in mesh.shape:
+        return None
+    if want in used:
+        return None  # one mesh axis at most once per tensor
+    if dim_size % mesh.shape[want] != 0:
+        return None  # divisibility fallback: replicate
+    return want
+
+
+def spec_pspec(mesh: Mesh, spec: ParamSpec) -> P:
+    used: set = set()
+    out = []
+    for size, logical in zip(spec.shape, spec.logical_axes):
+        ax = _resolve(mesh, size, logical, used)
+        if ax:
+            used.add(ax)
+        out.append(ax)
+    return P(*out)
+
+
+def param_pspecs(mesh: Mesh, specs) -> Any:
+    """PartitionSpec tree from a ParamSpec tree."""
+    return jax.tree.map(lambda s: spec_pspec(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def slot_pspecs(mesh: Mesh, specs, slots) -> Any:
+    """PartitionSpecs for a SubspaceState.slots tree.
+
+    V (..., k, r) inherits the weight's k-axis sharding; B/m/v (..., n, r)
+    the n-axis; energy (k,) the k-axis; rank axis replicated.
+    """
+    flat_slots, treedef = jax.tree.flatten(slots, is_leaf=subspace._is_slot)
+    flat_specs = treedef.flatten_up_to(specs)
+    out = []
+    for slot, spec in zip(flat_slots, flat_specs):
+        ps = spec_pspec(mesh, spec)
+        parts = list(ps) + [None] * (len(spec.shape) - len(ps))
+        if isinstance(slot, subspace.LowRankSlot):
+            lead = parts[:-2]
+            k_ax, n_ax = parts[-2], parts[-1]
+            # V sharded along the weight's FSDP axis forces a partial-sum
+            # all-reduce in every x@V; replicating avoids it but costs
+            # per-device bytes.  Size-aware rule (§Perf iter 5): replicate
+            # V when its full size is < 64 MB, else keep it k-sharded
+            # (stacked expert Vs on deepseek are ~23 GB — must shard).
+            v_bytes = 4 * np.prod(slot.proj.shape) if hasattr(
+                slot.proj, "shape") else 0
+            v_k = None if v_bytes < 64 * 2**20 else k_ax
+            proj = P(*(lead + [v_k, None]))
+            b = P(*(lead + [n_ax, None]))
+            energy = P(None)
+            out.append(subspace.LowRankSlot(proj=proj, b=b, m=b, v=b,
+                                            energy=energy))
+        else:
+            out.append(subspace.DenseSlot(m=P(*parts), v=P(*parts)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_pspec(mesh: Mesh, batch_size: int) -> Optional[tuple]:
+    """Mesh axes to shard the batch dim over (pod+data when divisible)."""
+    axes = [a for a in BATCH_AXES if a in mesh.shape]
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if axes and batch_size % total == 0:
+        return tuple(axes) if len(axes) > 1 else axes[0]
+    # try data only
+    if "data" in mesh.shape and batch_size % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def named_shardings(mesh: Mesh, pspec_tree) -> Any:
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        pspec_tree, is_leaf=lambda x: isinstance(x, P))

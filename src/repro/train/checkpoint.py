@@ -1,0 +1,144 @@
+"""Fault-tolerant checkpointing.
+
+Properties required at 1000-node scale, implemented here:
+  * step-atomic: write to ``step_XXXX.tmp/`` then ``os.rename`` — a crash
+    mid-write never corrupts the latest checkpoint;
+  * integrity: per-leaf CRC32 manifest verified on restore;
+  * keep-last-k garbage collection;
+  * resume = ``latest_step`` + template-based restore (the treedef comes
+    from the config, so code upgrades that keep param structure are safe);
+  * elastic restore: leaves are saved UNSHARDED (host numpy); ``restore``
+    accepts a sharding tree and ``jax.device_put``s each leaf — the saved
+    artifact is mesh-independent, so DP/TP width can change across restarts.
+
+Storage is one ``.npz`` per checkpoint (zip of npy) + a JSON manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "||"
+
+
+def _is_prng_key(x) -> bool:
+    return hasattr(x, "dtype") and jax.dtypes.issubdtype(
+        x.dtype, jax.dtypes.prng_key)
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(
+            str(p.key) if hasattr(p, "key") else
+            (str(p.idx) if hasattr(p, "idx") else str(p.name))
+            for p in path)
+        if _is_prng_key(leaf):  # typed PRNG keys serialise as raw data
+            leaf = jax.random.key_data(leaf)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(workdir: str, step: int, tree: Any, *, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    os.makedirs(workdir, exist_ok=True)
+    final = os.path.join(workdir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": int(step),
+        "crc": {k: zlib.crc32(v.tobytes()) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _gc(workdir, keep)
+    return final
+
+
+def _gc(workdir: str, keep: int):
+    steps = all_steps(workdir)
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(workdir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def all_steps(workdir: str):
+    if not os.path.isdir(workdir):
+        return []
+    out = []
+    for name in os.listdir(workdir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(workdir, name,
+                                             "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(workdir: str) -> Optional[int]:
+    steps = all_steps(workdir)
+    return steps[-1] if steps else None
+
+
+def restore(workdir: str, step: int, template: Any,
+            shardings: Any = None) -> Any:
+    """Fill ``template``'s treedef with saved leaves (CRC-verified).
+
+    ``shardings``: optional matching tree of jax.sharding.Sharding — each
+    leaf is device_put with its sharding (elastic restore onto any mesh).
+    """
+    path = os.path.join(workdir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    flat_s = (treedef.flatten_up_to(shardings)
+              if shardings is not None else [None] * len(flat_t))
+    leaves = []
+    for (pth, tleaf), shd in zip(flat_t, flat_s):
+        key = SEP.join(
+            str(p.key) if hasattr(p, "key") else
+            (str(p.idx) if hasattr(p, "idx") else str(p.name))
+            for p in pth)
+        arr = data[key]
+        crc = zlib.crc32(arr.tobytes())
+        if crc != manifest["crc"][key]:
+            raise IOError(f"checkpoint corruption at leaf {key!r} "
+                          f"(crc {crc} != {manifest['crc'][key]})")
+        if _is_prng_key(tleaf):
+            leaves.append(jax.random.wrap_key_data(jax.numpy.asarray(arr)))
+            continue
+        if hasattr(tleaf, "dtype"):
+            arr = arr.astype(tleaf.dtype)
+        if shd is not None:
+            leaves.append(jax.device_put(arr, shd))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree.structure(template), leaves)
+    return tree, manifest
+
+
+def restore_latest(workdir: str, template: Any, shardings: Any = None):
+    step = latest_step(workdir)
+    if step is None:
+        return None, None
+    return restore(workdir, step, template, shardings)

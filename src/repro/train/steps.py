@@ -1,0 +1,205 @@
+"""Step builders: the functions that get jit'd / lowered.
+
+``make_train_step(cfg, tcfg)`` returns the INNER step of Algorithm 1 (the
+hot path the dry-run lowers); ``make_outer_step`` the merge+resample;
+``make_adamw_train_step`` the Vanilla-IPA baseline; ``make_zo_train_step``
+the forward-only LowRank-LR step; ``make_prefill_step`` /
+``make_decode_step`` the serving paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models import encdec, lm
+from ..models.common import act_dtype
+from ..optim import adamw, subspace, zo
+from ..optim.schedule import SCHEDULES
+from .loss import chunked_ce
+
+Array = jax.Array
+
+LB_COEFF = 0.01
+ZLOSS_COEFF = 1e-3
+
+
+def build_loss_fn(cfg: ModelConfig) -> Callable:
+    """loss_fn(packed_params, batch) -> scalar (batch-mean token CE)."""
+
+    def loss_fn(packed, batch):
+        if cfg.is_encoder_decoder:
+            h, aux = encdec.forward_hidden(
+                packed, {"frames": batch["frames"],
+                         "tokens": batch["tokens"]}, cfg)
+            loss = chunked_ce(h, packed["unembed"], batch["labels"],
+                              true_vocab=cfg.vocab_size,
+                              chunk=cfg.loss_chunk)
+            return loss
+        extra = batch.get("extra_embeds")
+        h, aux = lm.forward_hidden(packed, batch["tokens"], cfg,
+                                   extra_embeds=extra)
+        if extra is not None:  # loss only over the text region
+            h = h[:, extra.shape[1]:]
+        loss = chunked_ce(h, packed["unembed"], batch["labels"],
+                          true_vocab=cfg.vocab_size, chunk=cfg.loss_chunk)
+        if cfg.family == "moe":
+            loss = loss + LB_COEFF * aux["lb_loss"] + \
+                ZLOSS_COEFF * aux["router_z"]
+        return loss
+
+    return loss_fn
+
+
+def _lr_at(tcfg: TrainConfig, step):
+    sched = SCHEDULES.get(getattr(tcfg, "schedule", "cosine"),
+                          SCHEDULES["cosine"])
+    return sched(step, base_lr=tcfg.lr, warmup_steps=tcfg.warmup_steps,
+                 total_steps=tcfg.total_steps)
+
+
+def _pack_dtype(cfg):
+    dt = act_dtype(cfg)
+    return dt if dt != jnp.float32 else None
+
+
+# ---------------------------------------------------------------------------
+# LowRank-IPA (Algorithm 1) steps
+# ---------------------------------------------------------------------------
+
+def _microbatch(batch, n: int):
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    loss_fn: Optional[Callable] = None):
+    """Inner step: subspace-Adam on (B, dense) trainables.
+
+    ``tcfg.grad_accum > 1`` scans over microbatches (activation memory
+    divided by A; gradients averaged — exactly equivalent for mean
+    losses over equal splits).
+    """
+    loss_fn = loss_fn or build_loss_fn(cfg)
+    pdt = _pack_dtype(cfg)
+
+    def train_step(params, opt_state: subspace.SubspaceState, batch):
+        lr = _lr_at(tcfg, opt_state.step)
+        trainable = subspace.trainable_of(params, opt_state)
+
+        def f(t, mb):
+            packed = subspace.packed_params(params, opt_state, t, dtype=pdt)
+            return loss_fn(packed, mb)
+
+        a = max(1, tcfg.grad_accum)
+        if a == 1:
+            loss, grads = jax.value_and_grad(f)(trainable, batch)
+        else:
+            micro = _microbatch(batch, a)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(f)(trainable, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32),
+                                 trainable)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / a, gsum)
+            loss = lsum / a
+        new_params, _, new_state, gn = subspace.inner_update(
+            grads, trainable, params, opt_state, lr=lr, tcfg=tcfg)
+        return new_params, new_state, {"loss": loss, "grad_norm": gn,
+                                       "lr": lr}
+
+    return train_step
+
+
+def make_outer_step(cfg: ModelConfig, tcfg: TrainConfig):
+    def outer_step(params, opt_state):
+        return subspace.outer_merge_resample(params, opt_state, tcfg)
+    return outer_step
+
+
+# ---------------------------------------------------------------------------
+# Vanilla IPA (full AdamW) baseline
+# ---------------------------------------------------------------------------
+
+def make_adamw_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                          loss_fn: Optional[Callable] = None):
+    loss_fn = loss_fn or build_loss_fn(cfg)
+
+    def train_step(params, opt_state: adamw.AdamWState, batch):
+        lr = _lr_at(tcfg, opt_state.step)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state, gn = adamw.update(
+            grads, opt_state, params, lr=lr, beta1=tcfg.beta1,
+            beta2=tcfg.beta2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip)
+        return new_params, new_state, {"loss": loss, "grad_norm": gn,
+                                       "lr": lr}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# LowRank-LR (forward-only ZO) step
+# ---------------------------------------------------------------------------
+
+def make_zo_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                       loss_fn: Optional[Callable] = None):
+    loss_fn = loss_fn or build_loss_fn(cfg)
+    pdt = _pack_dtype(cfg)
+
+    def train_step(params, opt_state: subspace.SubspaceState, batch):
+        lr = _lr_at(tcfg, opt_state.step)
+        key = jax.random.fold_in(opt_state.key, opt_state.step)
+        loss, new_params, new_state, gn = zo.zo_inner_step(
+            loss_fn, params, opt_state, batch, key, lr=lr, tcfg=tcfg,
+            dtype=pdt)
+        return new_params, new_state, {"loss": loss, "grad_norm": gn,
+                                       "lr": lr}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Eval / serving steps
+# ---------------------------------------------------------------------------
+
+def make_eval_step(cfg: ModelConfig, loss_fn: Optional[Callable] = None):
+    loss_fn = loss_fn or build_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        def prefill_step(params, batch, state):
+            state = encdec.start_decode(params, batch["frames"], cfg, state)
+            lg, state = encdec.decode_step(params, batch["tokens"], cfg,
+                                           state)
+            return lg, state
+        return prefill_step
+
+    def prefill_step(params, batch, state):
+        return lm.prefill(params, batch["tokens"], cfg, state,
+                          extra_embeds=batch.get("extra_embeds"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        def decode_step(params, token, state):
+            return encdec.decode_step(params, token, cfg, state)
+        return decode_step
+
+    def decode_step(params, token, state):
+        return lm.decode_step(params, token, cfg, state)
+    return decode_step

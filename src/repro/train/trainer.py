@@ -1,0 +1,152 @@
+"""Training loop with the fault-tolerance machinery.
+
+Features (per the 1000+-node posture in DESIGN.md §5):
+  * auto-resume from the latest valid checkpoint (step-indexed data ⇒ the
+    stream continues exactly);
+  * periodic step-atomic checkpoints (keep-k);
+  * preemption hook: SIGTERM/SIGINT → checkpoint-and-exit (simulates
+    maintenance-event draining on real pods);
+  * straggler watchdog: per-step wall-clock vs a running median; slow steps
+    are counted and surfaced (at scale this signal feeds the job controller
+    that hot-swaps the slice — here it raises a callback);
+  * lazy-update orchestration: every ``tcfg.lazy_k`` inner steps runs the
+    outer merge+resample (two jitted functions; no retrace).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models import encdec, lm
+from ..optim import adamw, subspace
+from . import checkpoint as ckpt
+from . import steps as steps_mod
+
+
+@dataclass
+class TrainerReport:
+    steps_run: int = 0
+    losses: List[float] = field(default_factory=list)
+    step_times: List[float] = field(default_factory=list)
+    resumed_from: Optional[int] = None
+    straggler_events: int = 0
+    preempted: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 loader: Callable[[int], Dict], workdir: Optional[str] = None,
+                 loss_fn: Optional[Callable] = None,
+                 checkpoint_every: int = 0, keep: int = 3,
+                 straggler_factor: float = 3.0,
+                 on_straggler: Optional[Callable] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.loader = loader
+        self.workdir = workdir
+        self.checkpoint_every = checkpoint_every
+        self.keep = keep
+        self.straggler_factor = straggler_factor
+        self.on_straggler = on_straggler
+        self._preempt = False
+
+        model = encdec if cfg.is_encoder_decoder else lm
+        key = jax.random.key(tcfg.seed)
+        pkey, okey = jax.random.split(key)
+        self.params = model.init_params(cfg, pkey)
+
+        if tcfg.optimizer == "adamw":
+            self.opt_state = adamw.init(self.params)
+            self._inner = jax.jit(steps_mod.make_adamw_train_step(
+                cfg, tcfg, loss_fn))
+            self._outer = None
+        elif tcfg.optimizer in ("lowrank_adam", "lowrank_lr"):
+            self.opt_state = subspace.init(self.params, tcfg, okey)
+            mk = (steps_mod.make_train_step if tcfg.optimizer ==
+                  "lowrank_adam" else steps_mod.make_zo_train_step)
+            self._inner = jax.jit(mk(cfg, tcfg, loss_fn))
+            self._outer = jax.jit(steps_mod.make_outer_step(cfg, tcfg))
+        else:
+            raise ValueError(tcfg.optimizer)
+        self.step = 0
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempt = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass  # not on main thread (tests)
+
+    def request_preemption(self):
+        """Programmatic preemption (tests / controllers)."""
+        self._preempt = True
+
+    def maybe_resume(self) -> Optional[int]:
+        if not self.workdir:
+            return None
+        template = {"params": self.params, "opt": self.opt_state}
+        restored, manifest = ckpt.restore_latest(self.workdir, template)
+        if restored is None:
+            return None
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = manifest["step"]
+        return self.step
+
+    def save(self):
+        if not self.workdir:
+            return
+        ckpt.save(self.workdir, self.step,
+                  {"params": self.params, "opt": self.opt_state},
+                  keep=self.keep, extra={"arch": self.cfg.name})
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, num_steps: int, log_every: int = 0) -> TrainerReport:
+        self._install_signal_handlers()
+        report = TrainerReport(resumed_from=self.maybe_resume())
+        times: List[float] = []
+        target = self.step + num_steps
+        while self.step < target:
+            t0 = time.perf_counter()
+            if (self._outer is not None and self.step > 0 and
+                    self.step % self.tcfg.lazy_k == 0):
+                self.params, self.opt_state = jax.block_until_ready(
+                    self._outer(self.params, self.opt_state))
+            batch = self.loader(self.step)
+            self.params, self.opt_state, metrics = self._inner(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            report.losses.append(loss)
+            report.step_times.append(dt)
+            # straggler watchdog
+            if len(times) >= 8:
+                med = float(np.median(times[-64:]))
+                if dt > self.straggler_factor * med:
+                    report.straggler_events += 1
+                    if self.on_straggler:
+                        self.on_straggler(self.step, dt, med)
+            self.step += 1
+            report.steps_run += 1
+            if log_every and self.step % log_every == 0:
+                print(f"step {self.step:6d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if self.checkpoint_every and \
+                    self.step % self.checkpoint_every == 0:
+                self.save()
+            if self._preempt:
+                self.save()
+                report.preempted = True
+                break
+        return report

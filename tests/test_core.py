@@ -1,0 +1,338 @@
+"""Paper-theory tests: samplers (Alg. 2-4), estimators (Def. 2), MSE
+(Prop. 1), optimality (Thm. 2/3, Prop. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (estimators, mse, samplers)
+
+KEY = jax.random.key
+
+
+# ---------------------------------------------------------------------------
+# Admissibility: E[V V^T] = c I_n (Definition 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["gaussian", "stiefel", "coordinate"])
+@pytest.mark.parametrize("c", [1.0, 0.5])
+def test_sampler_isotropy(name, c):
+    n, r, k = 12, 4, 6000
+    keys = jax.random.split(KEY(0), k)
+    vs = jax.vmap(lambda kk: samplers.sample_v(name, kk, n, r, c=c))(keys)
+    ep = mse.empirical_ep(vs)
+    np.testing.assert_allclose(np.asarray(ep), c * np.eye(n),
+                               atol=0.12 * c)
+
+
+@pytest.mark.parametrize("name", ["stiefel", "coordinate"])
+def test_theorem2_condition_exact(name):
+    """V^T V = (c n / r) I_r almost surely — the Thm.-2 optimality cond."""
+    n, r, c = 20, 5, 0.7
+    for i in range(5):
+        v = samplers.sample_v(name, KEY(i), n, r, c=c)
+        np.testing.assert_allclose(np.asarray(v.T @ v),
+                                   (c * n / r) * np.eye(r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["stiefel", "coordinate"])
+def test_theorem2_trace_optimal(name):
+    """tr(P^2) == n^2 c^2 / r deterministically for optimal samplers."""
+    n, r, c = 16, 4, 1.0
+    v = samplers.sample_v(name, KEY(3), n, r, c=c)
+    p = v @ v.T
+    assert np.isclose(float(jnp.trace(p @ p)),
+                      mse.trace_ep2_optimal(n, r, c), rtol=1e-5)
+
+
+def test_gaussian_trace_suboptimal():
+    """Gaussian: tr E[P^2] = c^2 n (n+r+1)/r > n^2c^2/r (Remark 1)."""
+    n, r, c, k = 10, 3, 1.0, 8000
+    keys = jax.random.split(KEY(1), k)
+    vs = jax.vmap(lambda kk: samplers.gaussian(kk, n, r, c=c))(keys)
+    t = float(jnp.trace(mse.empirical_ep2(vs)))
+    assert np.isclose(t, mse.trace_ep2_gaussian(n, r, c), rtol=0.08)
+    assert t > mse.trace_ep2_optimal(n, r, c) * 1.2
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3 machinery: water-filling + systematic pi-ps + dependent sampler
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=4, max_size=24),
+       st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_waterfill_feasible(sigmas, r):
+    n = len(sigmas)
+    r = min(r, n - 1)
+    if r < 1:
+        return
+    pi = np.asarray(samplers.waterfill_inclusion_probs(
+        jnp.asarray(sigmas, jnp.float32), r))
+    assert np.all(pi > 0) and np.all(pi <= 1 + 1e-5)
+    assert np.isclose(pi.sum(), r, rtol=1e-4)
+
+
+def test_waterfill_kkt_structure():
+    """Uncapped probabilities proportional to sqrt(sigma) (Eq. 17)."""
+    sig = jnp.asarray([100.0, 9.0, 4.0, 1.0, 0.25, 0.0])
+    r = 3
+    pi = np.asarray(samplers.waterfill_inclusion_probs(sig, r))
+    uncapped = pi < 1.0 - 1e-6
+    s = np.sqrt(np.asarray(sig))
+    # ratios pi_i / sqrt(sigma_i) equal among uncapped sigma>0 directions
+    ratios = pi[uncapped & (s > 0)] / s[uncapped & (s > 0)]
+    assert np.allclose(ratios, ratios[0], rtol=1e-3)
+
+
+def test_waterfill_minimises_objective():
+    """Phi(pi*) <= Phi(pi) for random feasible pi (Thm. 3 optimality)."""
+    rng = np.random.default_rng(0)
+    sig = jnp.asarray(rng.uniform(0.1, 10.0, size=12).astype(np.float32))
+    r = 4
+    pi_star = samplers.waterfill_inclusion_probs(sig, r)
+    phi_star = float(mse.phi_min_dependent(sig, r, 1.0, pi=pi_star))
+    for _ in range(200):
+        x = rng.uniform(0.05, 1.0, size=12)
+        x = x / x.sum() * r
+        x = np.clip(x, 1e-3, 1.0)
+        x = x / x.sum() * r
+        if np.any(x > 1.0):
+            continue
+        phi = float(mse.phi_min_dependent(sig, r, 1.0,
+                                          pi=jnp.asarray(x, jnp.float32)))
+        assert phi_star <= phi + 1e-3
+
+
+def test_systematic_sampling_marginals():
+    """Fixed size r; Pr(i in J) == pi_i (Madow systematic design)."""
+    rng = np.random.default_rng(1)
+    n, r = 10, 4
+    pi = rng.uniform(0.1, 1.0, size=n)
+    pi = pi / pi.sum() * r
+    pi = np.clip(pi, 0, 1.0)
+    pi = pi / pi.sum() * r
+    pij = jnp.asarray(pi, jnp.float32)
+    k = 8000
+    keys = jax.random.split(KEY(2), k)
+    idx = jax.vmap(lambda kk: samplers.systematic_sample(kk, pij, r))(keys)
+    assert idx.shape == (k, r)
+    # fixed size: all r indices distinct
+    counts = np.zeros(n)
+    for row in np.asarray(idx[:200]):
+        assert len(set(row.tolist())) == r
+    binc = np.bincount(np.asarray(idx).ravel(), minlength=n)
+    np.testing.assert_allclose(binc / k, pi, atol=0.05)
+
+
+def test_dependent_sampler_optimality_conditions():
+    """Alg. 4 output satisfies Eq. (18): E[P]=cI, E[Q^T P^2 Q]=c^2 diag(1/pi)."""
+    rng = np.random.default_rng(3)
+    n, r, c = 8, 3, 1.0
+    a = rng.normal(size=(n, n))
+    sigma = jnp.asarray(a @ a.T / n, jnp.float32)
+    evals, evecs = jnp.linalg.eigh(sigma)
+    evals = jnp.maximum(evals, 0.0)
+    pi = samplers.waterfill_inclusion_probs(evals, r)
+    k = 20000
+    keys = jax.random.split(KEY(4), k)
+    vs = jax.vmap(lambda kk: samplers.dependent(kk, evecs, pi, r, c=c))(keys)
+    ep = mse.empirical_ep(vs)
+    np.testing.assert_allclose(np.asarray(ep), c * np.eye(n), atol=0.08)
+    ep2 = mse.empirical_ep2(vs)
+    diag = np.diag(np.asarray(evecs.T @ ep2 @ evecs))
+    np.testing.assert_allclose(diag, c ** 2 / np.asarray(pi),
+                               rtol=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Estimators (Definition 2): weak unbiasedness (Theorem 1)
+# ---------------------------------------------------------------------------
+
+def _quadratic_problem(m=6, n=10, seed=0):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(m, n)) / np.sqrt(n), jnp.float32)
+    theta = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+
+    def loss(th):
+        return 0.5 * jnp.sum((th - A) ** 2)
+
+    grad = theta - A
+    return loss, theta, grad
+
+
+@pytest.mark.parametrize("name,c", [("stiefel", 1.0), ("coordinate", 1.0),
+                                    ("gaussian", 1.0), ("stiefel", 0.5)])
+def test_lowrank_ipa_weak_unbiasedness(name, c):
+    loss, theta, g = _quadratic_problem()
+    n, r = theta.shape[1], 3
+    k = 4000
+    keys = jax.random.split(KEY(5), k)
+
+    def one(kk):
+        v = samplers.sample_v(name, kk, n, r, c=c)
+        return estimators.lowrank_ipa(loss, theta, v)
+
+    est = jnp.mean(jax.vmap(one)(keys), axis=0)
+    np.testing.assert_allclose(np.asarray(est), c * np.asarray(g),
+                               atol=0.25 * float(jnp.abs(g).max()))
+
+
+def test_lowrank_ipa_bgrad_is_projected_grad():
+    """G_B == grad(theta) @ V exactly (chain rule, Thm. 1 proof)."""
+    loss, theta, g = _quadratic_problem()
+    v = samplers.stiefel(KEY(6), theta.shape[1], 4)
+    gb = estimators.lowrank_ipa_bgrad(loss, theta, v)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(g @ v),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_lowrank_lr_2pt_approx_unbiased():
+    """ZO 2-point -> ghat ~ c * g as sigma -> 0 (averaged over Z, V)."""
+    loss, theta, g = _quadratic_problem(m=4, n=6, seed=1)
+    n, r, sigma = 6, 3, 1e-3
+    k = 60000
+    keys = jax.random.split(KEY(7), k)
+
+    def one(kk):
+        k1, k2 = jax.random.split(kk)
+        v = samplers.stiefel(k1, n, r)
+        z = jax.random.normal(k2, (theta.shape[0], r))
+        return estimators.lowrank_lr_2pt(loss, theta, v, z, sigma)
+
+    est = jnp.mean(jax.vmap(one)(keys), axis=0)
+    err = float(jnp.max(jnp.abs(est - g)))
+    assert err < 0.3 * float(jnp.abs(g).max()) + 0.05
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1 MSE decomposition + method ordering
+# ---------------------------------------------------------------------------
+
+def _stochastic_quadratic(m=5, n=8, seed=2, noise=0.5):
+    """F(xi, th) = 0.5||th - A - xi||^2, xi ~ N(0, noise^2) iid entries."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    theta = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    g = theta - A                           # true gradient
+    sigma_xi = noise ** 2 * m * jnp.eye(n)  # E[xi^T xi], xi iid entries
+    sigma_th = g.T @ g
+    return A, theta, g, sigma_xi, sigma_th, noise
+
+
+@pytest.mark.parametrize("name", ["stiefel", "gaussian"])
+def test_prop1_mse_decomposition_matches_mc(name):
+    A, theta, g, sigma_xi, sigma_th, noise = _stochastic_quadratic()
+    m, n = theta.shape
+    r, c = 3, 1.0
+    k = 40000
+    keys = jax.random.split(KEY(8), k)
+
+    def one(kk):
+        k1, k2 = jax.random.split(kk)
+        xi = noise * jax.random.normal(k1, (m, n))
+        ghat_full = theta - A - xi          # classical IPA estimator
+        v = samplers.sample_v(name, k2, n, r, c=c)
+        p = v @ v.T
+        return jnp.sum((ghat_full @ p - g) ** 2)
+
+    mc = float(jnp.mean(jax.vmap(one)(keys)))
+    # closed form via Prop. 1 with the sampler's E[P^2]
+    vs = jax.vmap(lambda kk: samplers.sample_v(name, kk, n, r, c=c))(
+        jax.random.split(KEY(9), 20000))
+    ep2 = mse.empirical_ep2(vs)
+    pred = float(mse.mse_decomposition(sigma_xi, sigma_th, ep2, c)["total"])
+    assert np.isclose(mc, pred, rtol=0.08), (mc, pred)
+
+
+def test_mse_ordering_dependent_le_stiefel_le_gaussian():
+    A, theta, g, sigma_xi, sigma_th, noise = _stochastic_quadratic(seed=4)
+    m, n = theta.shape
+    r, c = 3, 1.0
+    sigma = sigma_xi + sigma_th
+    k = 30000
+
+    def run(sampler_fn):
+        keys = jax.random.split(KEY(10), k)
+
+        def one(kk):
+            k1, k2 = jax.random.split(kk)
+            xi = noise * jax.random.normal(k1, (m, n))
+            ghat = theta - A - xi
+            v = sampler_fn(k2)
+            return jnp.sum((ghat @ (v @ v.T) - g) ** 2)
+
+        return float(jnp.mean(jax.vmap(one)(keys)))
+
+    evals, evecs = jnp.linalg.eigh(sigma)
+    evals = jnp.maximum(evals, 0.0)
+    pi = samplers.waterfill_inclusion_probs(evals, r)
+    mse_dep = run(lambda kk: samplers.dependent(kk, evecs, pi, r, c=c))
+    mse_sti = run(lambda kk: samplers.stiefel(kk, n, r, c=c))
+    mse_gau = run(lambda kk: samplers.gaussian(kk, n, r, c=c))
+    assert mse_dep <= mse_sti * 1.02
+    assert mse_sti <= mse_gau * 1.02
+    # and the dependent MC MSE matches the Thm.-3 closed form
+    pred = float(mse.mse_dependent_optimal(sigma_xi, sigma_th, r, c))
+    assert np.isclose(mse_dep, pred, rtol=0.1), (mse_dep, pred)
+
+
+def test_prop4_rank_le_r_matches_full():
+    """rank(Sigma) <= r, c=1: optimal projected MSE == tr(Sigma_xi)."""
+    m, n, r = 4, 8, 3
+    rng = np.random.default_rng(5)
+    # low-rank signal + noise confined to 2 directions
+    q = np.linalg.qr(rng.normal(size=(n, n)))[0]
+    evals = np.zeros(n)
+    evals[:2] = [4.0, 1.0]
+    sigma = jnp.asarray(q @ np.diag(evals) @ q.T, jnp.float32)
+    sigma_xi = 0.6 * sigma
+    sigma_th = 0.4 * sigma
+    pred = float(mse.mse_dependent_optimal(sigma_xi, sigma_th, r, 1.0))
+    assert np.isclose(pred, float(jnp.trace(sigma_xi)), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# The custom_vjp low-rank linear (memory mechanism)
+# ---------------------------------------------------------------------------
+
+def test_lowrank_matmul_grads_match_reference():
+    from repro.models.linear import lowrank_matmul
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(3, 7, 10)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(10, 12)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(12, 4)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(10, 4)), jnp.float32)
+
+    def f_custom(x, b):
+        return jnp.sum(jnp.sin(lowrank_matmul(x, w, b, v)))
+
+    def f_ref(x, b):
+        return jnp.sum(jnp.sin(x @ (w + v @ b.T)))
+
+    np.testing.assert_allclose(np.asarray(f_custom(x, b)),
+                               np.asarray(f_ref(x, b)), rtol=1e-5)
+    gx1, gb1 = jax.grad(f_custom, argnums=(0, 1))(x, b)
+    gx2, gb2 = jax.grad(f_ref, argnums=(0, 1))(x, b)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(2, 10), st.integers(2, 10), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_lowrank_matmul_property(k, n_out, r):
+    """y == x W + (x V) B^T for random shapes (hypothesis sweep)."""
+    from repro.models.linear import lowrank_matmul
+    rng = np.random.default_rng(k * 100 + n_out * 10 + r)
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n_out)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n_out, r)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(k, r)), jnp.float32)
+    got = lowrank_matmul(x, w, b, v)
+    ref = x @ w + (x @ v) @ b.T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,274 @@
+"""Model-zoo tests: per-arch smoke, decode consistency, layer oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import encdec, lm
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.moe import moe_ffn
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+ARCHS = sorted(ASSIGNED)
+
+
+# ---------------------------------------------------------------------------
+# Per-arch reduced smoke tests (assignment requirement)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.key(0)
+    if cfg.is_encoder_decoder:
+        params = encdec.init_params(cfg, key)
+        frames = jax.random.normal(
+            jax.random.key(1), (2, cfg.encoder_seq, cfg.d_model))
+        toks = jax.random.randint(jax.random.key(2), (2, 16), 0,
+                                  cfg.vocab_size)
+        h, _ = encdec.forward_hidden(
+            params, {"frames": frames, "tokens": toks}, cfg)
+        assert h.shape == (2, 16, cfg.d_model)
+    else:
+        params = lm.init_params(cfg, key)
+        toks = jax.random.randint(jax.random.key(1), (2, 64), 0,
+                                  cfg.vocab_size)
+        extra = None
+        expect = 64
+        if cfg.vision_prefix_len:
+            extra = 0.02 * jax.random.normal(
+                jax.random.key(3), (2, cfg.vision_prefix_len, cfg.d_model))
+            expect += cfg.vision_prefix_len
+        h, _ = lm.forward_hidden(params, toks, cfg, extra_embeds=extra)
+        assert h.shape == (2, expect, cfg.d_model)
+        lg = lm.logits(params, h, cfg)
+        assert lg.shape[-1] == lm.padded_vocab(cfg)
+    assert not bool(jnp.isnan(h).any())
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "deepseek-v2-236b",
+                                  "qwen3-moe-30b-a3b", "mamba2-780m",
+                                  "zamba2-7b", "phi-3-vision-4.2b",
+                                  "internlm2-20b"])
+def test_decode_matches_forward(arch):
+    """prefill(S) + decode(1) == teacher-forced forward at position S."""
+    cfg = get_config(arch).reduced()
+    if cfg.family == "moe":  # disable token dropping for exact equality
+        cfg = cfg.replace(capacity_factor=64.0)
+    params = lm.init_params(cfg, jax.random.key(0))
+    S = 31
+    toks = jax.random.randint(jax.random.key(1), (2, S + 1), 0,
+                              cfg.vocab_size)
+    extra = None
+    if cfg.vision_prefix_len:
+        extra = 0.02 * jax.random.normal(
+            jax.random.key(3), (2, cfg.vision_prefix_len, cfg.d_model))
+    h, _ = lm.forward_hidden(params, toks, cfg, extra_embeds=extra)
+    ref = lm.logits(params, h[:, -1:], cfg)
+    st = lm.alloc_decode_state(cfg, 2, S + 1 + cfg.vision_prefix_len)
+    _, st = lm.prefill(params, toks[:, :S], cfg, st, extra_embeds=extra)
+    got, _ = lm.decode_step(params, toks[:, S:S + 1], cfg, st)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_encdec_decode_runs():
+    cfg = get_config("whisper-small").reduced()
+    params = encdec.init_params(cfg, jax.random.key(0))
+    frames = jax.random.normal(jax.random.key(1),
+                               (2, cfg.encoder_seq, cfg.d_model))
+    st = encdec.alloc_state(cfg, 2, cfg.encoder_seq)
+    st = encdec.start_decode(params, frames, cfg, st)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(3):
+        lg, st = encdec.decode_step(params, tok, cfg, st)
+        tok = jnp.argmax(lg[:, :, :cfg.vocab_size], -1).astype(jnp.int32)
+    assert int(st.pos) == 3
+    assert not bool(jnp.isnan(lg).any())
+
+
+def test_encdec_decode_matches_teacher_forcing():
+    cfg = get_config("whisper-small").reduced()
+    params = encdec.init_params(cfg, jax.random.key(0))
+    frames = jax.random.normal(jax.random.key(1),
+                               (1, cfg.encoder_seq, cfg.d_model))
+    S = 7
+    toks = jax.random.randint(jax.random.key(2), (1, S + 1), 0,
+                              cfg.vocab_size)
+    enc = encdec.encode(params, frames, cfg)
+    h = encdec.decoder_hidden(params, toks, enc, cfg)
+    from repro.models.linear import linear
+    ref = linear(h[:, -1:], params["unembed"])
+    st = encdec.alloc_state(cfg, 1, cfg.encoder_seq)
+    st = encdec.start_decode(params, frames, cfg, st)
+    for i in range(S + 1):
+        lg, st = encdec.decode_step(params, toks[:, i:i + 1], cfg, st)
+    # lg at step S is the prediction *after* consuming token S
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Layer oracles
+# ---------------------------------------------------------------------------
+
+def _naive_attention(q, k, v, causal=True, scale=None):
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale or D ** -0.5
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("sq,hq,hkv,qc,kc", [
+    (64, 4, 4, 16, 16), (64, 8, 2, 32, 16), (96, 6, 3, 32, 32),
+    (64, 4, 1, 64, 64),
+])
+def test_blockwise_attention_matches_naive(sq, hq, hkv, qc, kc):
+    key = jax.random.key(sq + hq)
+    kq, kk, kv = jax.random.split(key, 3)
+    D = 16
+    q = jax.random.normal(kq, (2, sq, hq, D))
+    k = jax.random.normal(kk, (2, sq, hkv, D))
+    v = jax.random.normal(kv, (2, sq, hkv, D))
+    got = blockwise_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc)
+    ref = _naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_attention_grad_matches_naive():
+    key = jax.random.key(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 32, 2, 8))
+    k = jax.random.normal(kk, (1, 32, 2, 8))
+    v = jax.random.normal(kv, (1, 32, 2, 8))
+
+    f1 = lambda q: jnp.sum(blockwise_attention(q, k, v, q_chunk=8,
+                                               kv_chunk=8) ** 2)
+    f2 = lambda q: jnp.sum(_naive_attention(q, k, v) ** 2)
+    g1, g2 = jax.grad(f1)(q), jax.grad(f2)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_matches_naive():
+    key = jax.random.key(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 1, 4, 8))
+    kc = jax.random.normal(kk, (2, 16, 2, 8))
+    vc = jax.random.normal(kv, (2, 16, 2, 8))
+    got = decode_attention(q, kc, vc, jnp.asarray(10))
+    ref = _naive_attention(q, kc[:, :10], vc[:, :10], causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def _naive_ssd(x, dt, a_log, b, c, d_skip):
+    """Token-by-token recurrence oracle."""
+    B, S, H, P = x.shape
+    G, N = b.shape[-2], b.shape[-1]
+    rep = H // G
+    bh = np.repeat(np.asarray(b), rep, axis=2)
+    ch = np.repeat(np.asarray(c), rep, axis=2)
+    a = -np.exp(np.asarray(a_log))
+    xn, dtn = np.asarray(x), np.asarray(dt)
+    h = np.zeros((B, H, N, P))
+    y = np.zeros_like(xn)
+    for t in range(S):
+        dec = np.exp(dtn[:, t] * a)  # (B, H)
+        h = dec[..., None, None] * h + np.einsum(
+            "bhn,bhp,bh->bhnp", bh[:, t], xn[:, t], dtn[:, t])
+        y[:, t] = np.einsum("bhn,bhnp->bhp", ch[:, t], h) + \
+            xn[:, t] * np.asarray(d_skip)[None, :, None]
+    return y, h
+
+
+@pytest.mark.parametrize("s,h,g,n,chunk", [
+    (32, 4, 1, 8, 8), (64, 4, 2, 8, 16), (48, 2, 1, 4, 16),
+])
+def test_ssd_chunked_matches_recurrence(s, h, g, n, chunk):
+    key = jax.random.key(s + h)
+    ks = jax.random.split(key, 5)
+    B, P = 2, 8
+    x = jax.random.normal(ks[0], (B, s, h, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    b = jax.random.normal(ks[3], (B, s, g, n)) * 0.5
+    c = jax.random.normal(ks[4], (B, s, g, n)) * 0.5
+    d_skip = jnp.ones((h,))
+    got, st = ssd_chunked(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                          return_state=True)
+    ref, st_ref = _naive_ssd(x, dt, a_log, b, c, d_skip)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), st_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_step_matches_chunked():
+    key = jax.random.key(11)
+    ks = jax.random.split(key, 5)
+    B, S, H, P, G, N = 1, 16, 2, 4, 1, 4
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.5
+    b = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    c = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    d_skip = jnp.zeros((H,))
+    ref, _ = ssd_chunked(x, dt, a_log, b, c, d_skip, chunk=8,
+                         return_state=True)
+    st = jnp.zeros((B, H, N, P))
+    for t in range(S):
+        y, st = ssd_decode_step(x[:, t], dt[:, t], a_log, b[:, t], c[:, t],
+                                d_skip, st)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_no_drop_matches_dense_reference():
+    """With huge capacity, the sort-based dispatch equals the dense top-k."""
+    key = jax.random.key(5)
+    ks = jax.random.split(key, 5)
+    B, S, d, E, f, k = 2, 8, 16, 4, 32, 2
+    x = jax.random.normal(ks[0], (B, S, d))
+    router = jax.random.normal(ks[1], (d, E)) * 0.1
+    wg = jax.random.normal(ks[2], (E, d, f)) * 0.1
+    wu = jax.random.normal(ks[3], (E, d, f)) * 0.1
+    wd = jax.random.normal(ks[4], (E, f, d)) * 0.1
+    y, aux = moe_ffn(x, router, wg, wu, wd, top_k=k, capacity_factor=16.0)
+
+    # dense reference: every expert over every token, combine top-k
+    xf = x.reshape(-1, d)
+    probs = jax.nn.softmax(xf @ router, -1)
+    tw, ti = jax.lax.top_k(probs, k)
+    tw = tw / tw.sum(-1, keepdims=True)
+    h = jnp.einsum("td,edf->tef", xf, wg)
+    u = jnp.einsum("td,edf->tef", xf, wu)
+    o = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * u, wd)
+    ref = jnp.einsum("tkd,tk->td", o[jnp.arange(xf.shape[0])[:, None], ti],
+                     tw).reshape(B, S, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 some tokens must be dropped (pass-through)."""
+    key = jax.random.key(9)
+    ks = jax.random.split(key, 5)
+    B, S, d, E, f = 2, 32, 8, 2, 8
+    x = jax.random.normal(ks[0], (B, S, d))
+    router = jnp.zeros((d, E)).at[0, 0].set(10.0)  # all tokens -> expert 0
+    wg = jax.random.normal(ks[2], (E, d, f))
+    wu = jax.random.normal(ks[3], (E, d, f))
+    wd = jax.random.normal(ks[4], (E, f, d))
+    y, aux = moe_ffn(x, router, wg, wu, wd, top_k=1, capacity_factor=0.1)
+    # capacity = ceil(64*1*0.1/2)=4 -> at most 4 tokens get expert output
+    nonzero = jnp.sum(jnp.any(jnp.abs(y.reshape(-1, d)) > 1e-6, axis=-1))
+    assert int(nonzero) <= 8
