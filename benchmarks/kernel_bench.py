@@ -1,0 +1,186 @@
+"""Fused-vs-unfused timings for the low-rank hot-path kernels.
+
+Per op shape it times:
+  * ``unfused_compiled`` — the jitted XLA reference schedule (kernels/ref.py
+    expressions; what the hot path ran before the dispatch layer);
+  * ``fused_interpret``  — the Pallas kernel in interpret mode (numerics
+    route on CPU; NOT a perf number, recorded to track interpreter drift);
+  * ``fused_compiled``   — the compiled Pallas kernel (TPU only; None when
+    this host has no TPU).
+
+plus one end-to-end inner-train-step timing (the Algorithm-1 hot loop with
+every op routed through kernels/dispatch.py) against the same step with the
+dispatch table pinned to the XLA route.  Results land in
+``BENCH_kernels.json`` next to the repo root, seeding the perf trajectory;
+each op entry carries its roofline arithmetic-intensity record
+(analysis/roofline.lowrank_kernel_entry).
+
+Usage:  PYTHONPATH=src python benchmarks/kernel_bench.py [--out PATH]
+        REPRO_BENCH_FAST=0 for the full shape sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import roofline
+from repro.kernels import dispatch, ref
+from repro.kernels.lowrank_backward import lowrank_backward as pl_backward
+from repro.kernels.lowrank_forward import lowrank_forward as pl_forward
+from repro.kernels.lowrank_update import lowrank_merge as pl_merge
+from repro.kernels.subspace_adam import subspace_adam as pl_adam
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+
+# (M, K, N, r): tokens x in-dim x out-dim x rank, MXU-aligned
+OP_SHAPES = [
+    (256, 256, 256, 16),
+    (256, 512, 512, 32),
+    (512, 512, 1024, 64),
+] + ([] if FAST else [(1024, 1024, 4096, 128)])
+
+
+def _timeit(fn, *args, iters: int = 5) -> float:
+    out = jax.block_until_ready(fn(*args))     # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _arrs(m, k, n, r, seed=0):
+    rng = np.random.default_rng(seed)
+    f = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    return dict(x=f(m, k), w=f(k, n), v=f(k, r), b=f(n, r), dy=f(m, n),
+                p=f(m, r), g=f(n, r), mom=jnp.abs(f(n, r)) * 0.1,
+                vel=jnp.abs(f(n, r)) * 0.01)
+
+
+def _unfused_fns():
+    """The dispatch layer's own XLA-route impls, jitted — so the baseline
+    is definitionally the schedule the hot path falls back to."""
+    import functools
+    fwd = jax.jit(functools.partial(dispatch._xla_forward, return_p=False))
+    bwd = jax.jit(dispatch._xla_backward)
+    merge = jax.jit(ref.lowrank_merge)
+    adam = jax.jit(lambda b, g, m, v: ref.subspace_adam(
+        b, g, m, v, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.0,
+        step=10.0))
+    return fwd, bwd, merge, adam
+
+
+def bench_ops() -> list:
+    on_tpu = jax.default_backend() == "tpu"
+    fwd_u, bwd_u, merge_u, adam_u = _unfused_fns()
+    rows = []
+    for (m, k, n, r) in OP_SHAPES:
+        a = _arrs(m, k, n, r)
+        interp_iters = 1      # interpret mode is python-speed
+        ops = {
+            "lowrank_forward": (
+                lambda itp: pl_forward(a["x"], a["w"], a["v"], a["b"],
+                                       interpret=itp),
+                lambda: fwd_u(a["x"], a["w"], a["v"], a["b"])),
+            "lowrank_backward": (
+                lambda itp: pl_backward(a["dy"], a["w"], a["v"], a["b"],
+                                        a["p"], interpret=itp),
+                lambda: bwd_u(a["dy"], a["w"], a["v"], a["b"], a["p"])),
+            "lowrank_merge": (
+                lambda itp: pl_merge(a["w"], a["v"], a["b"], interpret=itp),
+                lambda: merge_u(a["w"], a["v"], a["b"])),
+            "subspace_adam": (
+                lambda itp: pl_adam(a["b"], a["g"], a["mom"], a["vel"],
+                                    lr=1e-3, step=10.0, interpret=itp),
+                lambda: adam_u(a["b"], a["g"], a["mom"], a["vel"])),
+        }
+        for name, (fused, unfused) in ops.items():
+            fused_compiled_ms = None
+            if on_tpu:
+                # one jit instance reused across timed iterations — a fresh
+                # jax.jit per call would retrace and time the compiler
+                jf = jax.jit(lambda fused=fused: fused(False))
+                fused_compiled_ms = 1e3 * _timeit(jf, iters=10)
+            row = {
+                "op": name, "shape": {"m": m, "k": k, "n": n, "r": r},
+                "backend": jax.default_backend(),
+                "unfused_compiled_ms":
+                    1e3 * _timeit(lambda: unfused(), iters=10),
+                "fused_interpret_ms":
+                    1e3 * _timeit(lambda: fused(True), iters=interp_iters),
+                "fused_compiled_ms": fused_compiled_ms,
+                "roofline": roofline.lowrank_kernel_entry(
+                    name, m, k, n, r, itemsize=4),
+            }
+            rows.append(row)
+            print(f"{name} {m}x{k}x{n} r={r}: "
+                  f"unfused {row['unfused_compiled_ms']:.3f} ms, "
+                  f"interp {row['fused_interpret_ms']:.1f} ms, "
+                  f"compiled {row['fused_compiled_ms']}")
+    return rows
+
+
+def bench_train_step() -> dict:
+    """End-to-end inner step: dispatch-routed vs XLA-pinned (same step)."""
+    from repro.configs import TrainConfig, get_config
+    from repro.data.synthetic import lm_batch
+    from repro.models import lm
+    from repro.optim import subspace
+    from repro.train import steps as steps_mod
+
+    cfg = get_config("llama-tiny")
+    tcfg = TrainConfig(optimizer="lowrank_adam", sampler="stiefel", rank=8,
+                       lazy_k=10, lr=1e-3, warmup_steps=0, total_steps=100,
+                       min_dim_for_lowrank=64, schedule="constant")
+    params = lm.init_params(cfg, jax.random.key(0))
+    opt = subspace.init(params, tcfg, jax.random.key(1))
+    batch = lm_batch(0, 0, batch=4, seq_len=64, vocab=cfg.vocab_size)
+    step = jax.jit(steps_mod.make_train_step(cfg, tcfg))
+
+    def run():
+        p, o, metr = step(params, opt, batch)
+        return metr["loss"]
+
+    prev = os.environ.get("REPRO_KERNEL_DISPATCH")
+    try:
+        os.environ["REPRO_KERNEL_DISPATCH"] = "xla"
+        xla_ms = 1e3 * _timeit(run, iters=5)
+        routed_ms = xla_ms
+        if jax.default_backend() == "tpu":
+            os.environ.pop("REPRO_KERNEL_DISPATCH", None)
+            step = jax.jit(steps_mod.make_train_step(cfg, tcfg))
+            routed_ms = 1e3 * _timeit(run, iters=5)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_DISPATCH", None)
+        else:
+            os.environ["REPRO_KERNEL_DISPATCH"] = prev
+    return {"arch": "llama-tiny", "batch": 4, "seq": 64,
+            "backend": jax.default_backend(),
+            "inner_step_xla_ms": xla_ms,
+            "inner_step_dispatch_ms": routed_ms}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_kernels.json"))
+    args = p.parse_args(argv)
+    rec = {"backend": jax.default_backend(), "fast": FAST,
+           "ops": bench_ops(), "train_step": bench_train_step()}
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"train step: {rec['train_step']}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ ratio that flags remat/dispatch waste.
 from __future__ import annotations
 
 import re
-from typing import Dict
+from typing import Dict, Optional
 
 # TPU v5e hardware constants (assignment-specified)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -153,6 +153,86 @@ def active_param_count(cfg) -> int:
     if cfg.family != "moe":
         return total
     return total - _routed_inactive(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Low-rank kernel arithmetic intensity (fused vs unfused HBM traffic)
+# ---------------------------------------------------------------------------
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _mm_bytes(m: int, k: int, n: int, s: int, tile: int = 128,
+              out_s: Optional[int] = None) -> float:
+    """HBM traffic of one tiled (m,k) @ (k,n) matmul: each operand is
+    re-streamed once per tile-row/column of the other output dim."""
+    return (s * (m * k * _cdiv(n, tile) + k * n * _cdiv(m, tile))
+            + (out_s if out_s is not None else s) * m * n)
+
+
+def lowrank_kernel_entry(op: str, m: int, k: int, n: int, r: int,
+                         itemsize: int = 2) -> dict:
+    """FLOPs / HBM bytes / arithmetic intensity for one low-rank op.
+
+    Both columns use grid-revisit-aware traffic accounting (a 128-tiled
+    kernel re-fetches W once per output row-strip, x once per column-strip
+    — operands are NOT streamed just once): ``bytes_fused`` models the
+    Pallas kernels' actual BlockSpecs, ``bytes_unfused`` models autodiff's
+    default schedule as a sequence of independent tiled matmuls with HBM
+    round-trips for every intermediate.  The interesting entry is
+    ``lowrank_backward``: unfused, dy (m x n) is streamed by three separate
+    contractions (dy W^T, dy B, dy^T p) and q = dy B round-trips; fused, dy
+    tiles are read once.  Intensity compared against the v5e machine
+    balance PEAK_FLOPS / HBM_BW ≈ 240 FLOP/byte decides memory- vs
+    compute-bound.
+    """
+    s = itemsize
+    ni, nj = _cdiv(m, 128), _cdiv(n, 128)
+    if op == "lowrank_forward":
+        flops = 2 * m * k * n + 2 * m * k * r + 2 * m * r * n
+        # kernel BlockSpecs: x per j-slab, w per i-strip, v per (i, j) slab
+        # (its DMA is driven by the index map even though the j > 0 compute
+        # is skipped), b per i-strip; y and p written once.
+        fused = s * (m * k * nj + k * n * ni + k * r * ni * nj + n * r * ni
+                     + m * n + m * r)
+        # unfused: three tiled matmuls (x W, x V, p B^T) + the y0+y1 add.
+        unfused = (_mm_bytes(m, k, n, s) + _mm_bytes(m, k, r, s)
+                   + _mm_bytes(m, r, n, s) + 3 * s * m * n)
+    elif op == "lowrank_backward":
+        flops = 2 * m * n * k + 2 * m * n * r + 2 * m * r * k + 2 * m * n * r
+        # fused grid (i, j), full-K strips: dy once; w column-strip per i;
+        # v resident; b per (i, j); p per i-strip; dx written once; dB
+        # resident in VMEM, written once in fp32.
+        fused = s * (m * n + k * n * ni + k * r + n * r * ni + m * r
+                     + m * k) + 4 * n * r
+        # unfused: dy W^T, q = dy B (round-trips), q V^T, dx partial add,
+        # dy^T p (dy streamed a third time), dB in fp32.
+        unfused = (_mm_bytes(m, n, k, s) + _mm_bytes(m, n, r, s)
+                   + _mm_bytes(m, r, k, s) + 3 * s * m * k
+                   + _mm_bytes(n, m, r, s, out_s=4))
+    elif op == "lowrank_merge":
+        flops = 2 * k * n * r
+        nik = _cdiv(k, 256)
+        fused = s * (2 * k * n + k * r + n * r * nik)
+        # unfused: delta = V B^T materialised in fp32, then w + delta.
+        unfused = _mm_bytes(k, r, n, s, tile=256, out_s=4) \
+            + s * 2 * k * n + 4 * k * n
+    elif op == "subspace_adam":
+        flops = 10 * n * r
+        fused = 4 * (4 + 3) * n * r          # one round-trip of 4-in/3-out
+        unfused = 4 * (10 + 6) * n * r       # ~10 elementwise HBM passes
+    else:
+        raise ValueError(op)
+    return {
+        "op": op, "m": m, "k": k, "n": n, "r": r,
+        "flops": float(flops),
+        "bytes_fused": float(fused), "bytes_unfused": float(unfused),
+        "ai_fused": flops / fused, "ai_unfused": flops / unfused,
+        "machine_balance": PEAK_FLOPS / HBM_BW,
+        "bound_fused": "compute" if flops / fused > PEAK_FLOPS / HBM_BW
+                       else "memory",
+    }
 
 
 def roofline_terms(record: dict, cfg=None, shape=None) -> dict:

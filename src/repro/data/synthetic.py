@@ -60,13 +60,17 @@ def classification_batch(seed: int, step, *, batch: int, seq_len: int,
 
 def encdec_batch(seed: int, step, *, batch: int, enc_len: int, dec_len: int,
                  d_model: int, vocab: int) -> dict:
-    """Whisper-style: precomputed frame embeddings + target tokens."""
+    """Whisper-style: precomputed frame embeddings + target tokens.
+
+    Targets use the same mode-walk process as :func:`lm_batch` — uniform
+    tokens sit exactly at the log(vocab) entropy floor, leaving the decoder
+    nothing to learn and train-loss assertions nothing to measure.
+    """
     key = jax.random.fold_in(jax.random.key(seed + 31), step)
-    kf, kt = jax.random.split(key)
+    kf, _ = jax.random.split(key)
     frames = 0.1 * jax.random.normal(kf, (batch, enc_len, d_model))
-    toks = jax.random.randint(kt, (batch, dec_len + 1), 0, vocab
-                              ).astype(jnp.int32)
-    return {"frames": frames, "tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    lm = lm_batch(seed + 31, step, batch=batch, seq_len=dec_len, vocab=vocab)
+    return {"frames": frames, "tokens": lm["tokens"], "labels": lm["labels"]}
 
 
 def vlm_extra(seed: int, step, *, batch: int, prefix: int,

@@ -4,4 +4,4 @@ Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
 a jit'd wrapper in ops.py, and a pure-jnp oracle in ref.py.  Validated via
 interpret mode on CPU; targeted at TPU v5e (MXU 128x128, ~16 MB VMEM).
 """
-from . import ops, ref  # noqa: F401
+from . import dispatch, ops, ref  # noqa: F401

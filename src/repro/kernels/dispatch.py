@@ -1,0 +1,279 @@
+"""Shape-aware kernel dispatch: every low-rank op routed to its best impl.
+
+The training hot path (models/linear.py, optim/subspace.py) calls the
+functions in this module instead of choosing between raw Pallas kernels and
+jnp expressions itself.  Per call the dispatcher picks a route:
+
+  * ``pallas`` — the fused Pallas kernel, with automatic pad-to-tile for
+    ragged operands (lane = 128, sublane = 8/16): inputs are zero-padded up
+    to block multiples and outputs sliced back, so the old hard
+    ``assert K % bk == 0`` never bites callers.  On non-TPU backends the
+    kernels run in interpret mode (see kernels/ops.py / the
+    REPRO_PALLAS_INTERPRET knob).
+  * ``xla`` — the pure-jnp reference path (kernels/ref.py expressions),
+    which XLA fuses well on CPU/GPU and which serves as the fallback when a
+    Pallas kernel's VMEM working set would blow the ~16 MB budget.
+
+Route selection: ``REPRO_KERNEL_DISPATCH`` ∈ {pallas, xla, auto} overrides;
+``auto`` (default) = Pallas on TPU when the shape guard passes, XLA
+otherwise.  ``TABLE`` maps op -> {route -> impl} and is deliberately a
+plain dict so tests can monkeypatch impls to assert the hot path really
+flows through here.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .lowrank_backward import lowrank_backward as _pl_backward
+from .lowrank_forward import lowrank_forward as _pl_forward
+from .lowrank_update import lowrank_merge as _pl_merge
+from .lowrank_update import lowrank_project as _pl_project
+from .ops import _interpret
+from .subspace_adam import subspace_adam as _pl_adam
+
+Array = jax.Array
+
+LANE = 128           # TPU lane count: minor-dim tiling granularity
+SUBLANE = 16         # sublane granularity (16 covers bf16; 8 would do f32)
+VMEM_BUDGET = 12 * 2 ** 20   # conservative slice of the ~16 MB/core VMEM
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad2(a: Array, rows: int, cols: int) -> Array:
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _blocks(M: int, N: int, K: Optional[int] = None):
+    """Block sizes + padded dims for (M, N[, K]) with ragged-shape pad."""
+    bm = min(128, _round_up(M, SUBLANE))
+    bn = min(128, _round_up(N, LANE))
+    out = [bm, _round_up(M, bm), bn, _round_up(N, bn)]
+    if K is not None:
+        bk = min(128, _round_up(K, LANE))
+        out += [bk, _round_up(K, bk)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Route selection
+# ---------------------------------------------------------------------------
+
+def _bwd_vmem_bytes(M: int, K: int, N: int, r: int, itemsize: int) -> int:
+    """Working set of the fused backward (see lowrank_backward.py)."""
+    bm, Mp, bn, Np, _, Kp = _blocks(M, N, K)
+    return (Kp * (bn + r) * itemsize          # w column strip + v
+            + 4 * (bm * Kp + Np * r)          # dx f32 accumulator + whole dB
+            + bm * Kp * itemsize              # dx output block (dy.dtype)
+            + bm * (bn + r) * itemsize)       # dy tile + p strip
+
+
+def _fwd_vmem_bytes(M: int, K: int, N: int, r: int, itemsize: int) -> int:
+    bm, _, bn, _, bk, _ = _blocks(M, N, K)
+    return (bm * bk + bk * bn + bk * r + bn * r) * itemsize \
+        + 4 * (bm * bn + bm * r)
+
+
+def route(op: str, *, shapes: Tuple[int, ...] = (), itemsize: int = 4) -> str:
+    """Pick 'pallas' or 'xla' for ``op`` given (M, K, N, r)-style shapes."""
+    env = os.environ.get("REPRO_KERNEL_DISPATCH", "auto")
+    if env in ("pallas", "xla"):
+        return env
+    if env not in ("auto", ""):
+        raise ValueError(
+            f"REPRO_KERNEL_DISPATCH={env!r}: expected pallas, xla or auto")
+    if jax.default_backend() != "tpu":
+        return "xla"        # interpret-mode Pallas is a debug tool, not a path
+    if op == "lowrank_forward" and shapes:
+        m, k, n, r = shapes
+        if r > 512 or _fwd_vmem_bytes(m, k, n, r, itemsize) > VMEM_BUDGET:
+            return "xla"
+    if op == "lowrank_backward" and shapes:
+        m, k, n, r = shapes
+        if _bwd_vmem_bytes(m, k, n, r, itemsize) > VMEM_BUDGET:
+            return "xla"
+    return "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Pallas impls (pad-to-tile wrappers over the raw kernels)
+# ---------------------------------------------------------------------------
+
+def _pallas_forward(x2: Array, w: Array, v: Array, b: Array,
+                    return_p: bool):
+    M, K = x2.shape
+    N, r = w.shape[1], v.shape[1]
+    bm, Mp, bn, Np, bk, Kp = _blocks(M, N, K)
+    out = _pl_forward(
+        _pad2(x2, Mp, Kp), _pad2(w, Kp, Np), _pad2(v, Kp, r),
+        _pad2(b, Np, r), bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+        return_p=return_p)
+    if not return_p:
+        return out[:M, :N]
+    y, p = out
+    return y[:M, :N], p[:M]
+
+
+def _pallas_backward(dy2: Array, w: Array, v: Array, b: Array, p2: Array):
+    M, N = dy2.shape
+    K, r = w.shape[0], v.shape[1]
+    bm, Mp, bn, Np, _, Kp = _blocks(M, N, K)
+    dx, db = _pl_backward(
+        _pad2(dy2, Mp, Np), _pad2(w, Kp, Np), _pad2(v, Kp, r),
+        _pad2(b, Np, r), _pad2(p2, Mp, r), bm=bm, bn=bn,
+        interpret=_interpret())
+    return dx[:M, :K], db[:N]
+
+
+def _pallas_merge(w: Array, v: Array, b: Array) -> Array:
+    K, N = w.shape
+    r = v.shape[1]
+    bk = min(256, _round_up(K, SUBLANE))
+    bn = min(256, _round_up(N, LANE))
+    Kp, Np = _round_up(K, bk), _round_up(N, bn)
+    out = _pl_merge(_pad2(w, Kp, Np), _pad2(v, Kp, r), _pad2(b, Np, r),
+                    bk=bk, bn=bn, interpret=_interpret())
+    return out[:K, :N]
+
+
+def _pallas_project(g: Array, v: Array) -> Array:
+    K, N = g.shape
+    r = v.shape[1]
+    bk = min(256, _round_up(K, SUBLANE))
+    bn = min(256, _round_up(N, LANE))
+    Kp, Np = _round_up(K, bk), _round_up(N, bn)
+    out = _pl_project(_pad2(g, Kp, Np), _pad2(v, Kp, r), bn=bn, bk=bk,
+                      interpret=_interpret())
+    return out[:N]
+
+
+def _pallas_adam(b2, g2, m2, v2, *, lr, step, beta1, beta2, eps, wd):
+    rows, r = b2.shape
+    blk = min(256, _round_up(rows, SUBLANE))
+    rp = _round_up(rows, blk)
+    padded = [_pad2(a, rp, r) for a in (b2, g2, m2, v2)]
+    outs = _pl_adam(*padded, lr=lr, step=step, beta1=beta1, beta2=beta2,
+                    eps=eps, wd=wd, block=blk, interpret=_interpret())
+    return tuple(o[:rows] for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# XLA impls (the unfused reference schedule)
+# ---------------------------------------------------------------------------
+
+def _xla_forward(x2: Array, w: Array, v: Array, b: Array, return_p: bool):
+    p = x2 @ v
+    y = x2 @ w + p @ b.T
+    return (y, p) if return_p else y
+
+
+def _xla_backward(dy2: Array, w: Array, v: Array, b: Array, p2: Array):
+    dx = dy2 @ w.T + (dy2 @ b) @ v.T
+    db = jax.lax.dot_general(dy2, p2.astype(dy2.dtype), (((0,), (0,)),
+                                                         ((), ())),
+                             preferred_element_type=jnp.float32)
+    return dx, db
+
+
+def _xla_adam(b2, g2, m2, v2, *, lr, step, beta1, beta2, eps, wd):
+    return ref.subspace_adam(b2, g2, m2, v2, lr=lr, beta1=beta1, beta2=beta2,
+                             eps=eps, wd=wd, step=step)
+
+
+TABLE = {
+    "lowrank_forward": {"pallas": _pallas_forward, "xla": _xla_forward},
+    "lowrank_backward": {"pallas": _pallas_backward, "xla": _xla_backward},
+    "lowrank_merge": {"pallas": _pallas_merge, "xla": ref.lowrank_merge},
+    "lowrank_project": {"pallas": _pallas_project,
+                        "xla": ref.lowrank_project},
+    "subspace_adam": {"pallas": _pallas_adam, "xla": _xla_adam},
+}
+
+
+# ---------------------------------------------------------------------------
+# Public ops (leading-dim handling + routing)
+# ---------------------------------------------------------------------------
+
+def lowrank_forward(x: Array, w: Array, v: Array, b: Array, *,
+                    return_p: bool = False):
+    """y = x W + (x V) B^T over arbitrary leading dims of x.
+
+    ``return_p=True`` also returns p = x V (x.dtype — the only saved
+    activation) for the backward residual.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N, r = w.shape[1], v.shape[1]
+    x2 = x.reshape(-1, K)
+    impl = TABLE["lowrank_forward"][route(
+        "lowrank_forward", shapes=(x2.shape[0], K, N, r),
+        itemsize=x.dtype.itemsize)]
+    out = impl(x2, w, v, b, return_p)
+    if not return_p:
+        return out.reshape(lead + (N,))
+    y, p = out
+    return y.reshape(lead + (N,)), p.reshape(lead + (r,))
+
+
+def lowrank_backward(dy: Array, w: Array, v: Array, b: Array, p: Array):
+    """(dx, db) for y = x W + (x V) B^T, from dy and the residual p = x V.
+
+    dx has dy's leading dims + (K,); db is (N, r) fp32 with every leading
+    (batch/seq) axis contracted.
+    """
+    N = dy.shape[-1]
+    K, r = w.shape[0], v.shape[1]
+    lead = dy.shape[:-1]
+    dy2 = dy.reshape(-1, N)
+    p2 = p.reshape(-1, r)
+    impl = TABLE["lowrank_backward"][route(
+        "lowrank_backward", shapes=(dy2.shape[0], K, N, r),
+        itemsize=dy.dtype.itemsize)]
+    dx, db = impl(dy2, w, v, b, p2)
+    return dx.reshape(lead + (K,)), db
+
+
+def lowrank_merge(w: Array, v: Array, b: Array) -> Array:
+    """W + V B^T in fp32, any leading (expert/layer) dims, W.dtype out."""
+    impl = TABLE["lowrank_merge"][route("lowrank_merge")]
+    fn = impl
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w, v, b)
+
+
+def lowrank_project(g: Array, v: Array) -> Array:
+    """G^T V (N, r) fp32 — the Thm.-1 lift used by project-style baselines."""
+    impl = TABLE["lowrank_project"][route("lowrank_project")]
+    fn = impl
+    for _ in range(g.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(g, v)
+
+
+def subspace_adam(b: Array, g: Array, m: Array, v: Array, *, lr, step,
+                  beta1: float = 0.9, beta2: float = 0.999,
+                  eps: float = 1e-8, wd: float = 0.0):
+    """Fused Adam on stacked subspace variables.
+
+    All four arrays share shape (..., n, r) fp32 — leading (group/expert)
+    dims are folded into rows so ONE kernel launch covers a whole group of
+    same-shape B leaves.  Returns (b', m', v') with the input shape.
+    """
+    shape = b.shape
+    r = shape[-1]
+    flat = [a.reshape(-1, r) for a in (b, g, m, v)]
+    impl = TABLE["subspace_adam"][route("subspace_adam")]
+    nb, nm, nv = impl(*flat, lr=lr, step=step, beta1=beta1, beta2=beta2,
+                      eps=eps, wd=wd)
+    return nb.reshape(shape), nm.reshape(shape), nv.reshape(shape)

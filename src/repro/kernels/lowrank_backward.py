@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused low-rank backward — dx and dB in ONE dy pass.
+
+The inner-step backward of Algorithm 1 needs
+
+    dx = dy W^T + (dy B) V^T        (M, K)
+    dB = dy^T p                     (N, r),  p = x V saved by the forward
+
+Unfused, autodiff schedules three independent contractions over dy — dy is
+streamed from HBM three times and (dy B) once more.  This kernel makes one
+pass over dy tiles: grid (M/bm, N/bn) with the FULL K dimension blocked into
+VMEM, so each (bm, bn) dy tile is read exactly once and contributes
+
+  * its j-slice of the dx row-strip accumulator  (dy w_j^T + (dy b_j) v^T),
+  * its i-contribution to dB rows j              (dy^T p_i).
+
+dx accumulates in a (bm, K) f32 scratch written at the end of each i row;
+dB lives in VMEM as a whole-array output (constant index map -> single
+writeback at kernel end) because its contraction dim (M) is the OUTER grid
+axis.  VMEM cost is therefore ~ K*(bn+r)*s + 4*(bm*K + N*r) bytes — the
+dispatch layer guards this against the ~16 MB budget and falls back to the
+XLA path for oversized operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(dy_ref, w_ref, v_ref, b_ref, p_ref, dx_ref, db_ref, acc_ref, *,
+            n_j: int, bn: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_db():
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    dy = dy_ref[...]                                     # (bm, bn)
+    # dx row-strip: dy w_j^T + (dy b_j) v^T, f32 accumulate over j
+    q = jax.lax.dot(dy, b_ref[...],
+                    preferred_element_type=jnp.float32)  # (bm, r)
+    acc_ref[...] += (
+        jax.lax.dot(dy, w_ref[...].T, preferred_element_type=jnp.float32) +
+        jax.lax.dot(q, v_ref[...].T.astype(jnp.float32),
+                    preferred_element_type=jnp.float32))
+    # dB rows for this j block: accumulate dy^T p across the i sweep
+    db_ref[pl.ds(j * bn, bn), :] += jax.lax.dot(
+        dy.T, p_ref[...].astype(dy.dtype),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_j - 1)
+    def _fin():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def lowrank_backward(dy: Array, w: Array, v: Array, b: Array, p: Array, *,
+                     bm: int = 128, bn: int = 128,
+                     interpret: bool = False):
+    """dy (M,N), w (K,N), v (K,r), b (N,r), p (M,r) -> (dx (M,K), db (N,r)).
+
+    db is fp32 (Adam consumes it in fp32); dx is dy.dtype.
+    """
+    M, N = dy.shape
+    K = w.shape[0]
+    r = v.shape[1]
+    bm, bn = min(bm, M), min(bn, N)
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    n_j = N // bn
+
+    grid = (M // bm, n_j)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_j=n_j, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((K, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((N, r), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K), dy.dtype),
+            jax.ShapeDtypeStruct((N, r), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32)],
+        interpret=interpret,
+    )(dy, w, v, b, p)

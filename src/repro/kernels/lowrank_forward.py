@@ -24,18 +24,27 @@ Array = jax.Array
 
 def _kernel(x_ref, w_ref, v_ref, b_ref, o_ref, acc_ref, accp_ref, *,
             n_k: int):
+    j = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_p():
         accp_ref[...] = jnp.zeros_like(accp_ref)
 
     x = x_ref[...]
     acc_ref[...] += jax.lax.dot(
         x, w_ref[...], preferred_element_type=jnp.float32)
-    accp_ref[...] += jax.lax.dot(
-        x, v_ref[...], preferred_element_type=jnp.float32)
+
+    # p = x V is j-independent and the VMEM scratch persists across the
+    # grid: compute it during the j == 0 slab only, reuse it afterwards.
+    @pl.when(j == 0)
+    def _accum_p():
+        accp_ref[...] += jax.lax.dot(
+            x, v_ref[...], preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
     def _finish():
@@ -44,10 +53,27 @@ def _kernel(x_ref, w_ref, v_ref, b_ref, o_ref, acc_ref, accp_ref, *,
             preferred_element_type=jnp.float32)).astype(o_ref.dtype)
 
 
+def _kernel_p(x_ref, w_ref, v_ref, b_ref, o_ref, p_ref, acc_ref, accp_ref, *,
+              n_k: int):
+    """Same as :func:`_kernel` but also emits p = x V (the custom-vjp
+    residual), written out once at the end of the j == 0 slab's K sweep."""
+    _kernel(x_ref, w_ref, v_ref, b_ref, o_ref, acc_ref, accp_ref, n_k=n_k)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(j == 0, k == n_k - 1))
+    def _emit_p():
+        p_ref[...] = accp_ref[...].astype(p_ref.dtype)
+
+
 def lowrank_forward(x: Array, w: Array, v: Array, b: Array, *,
                     bm: int = 128, bn: int = 128, bk: int = 128,
-                    interpret: bool = False) -> Array:
-    """x (M,K) @ [w (K,N) + v (K,r) b (N,r)^T] -> (M,N)."""
+                    interpret: bool = False, return_p: bool = False):
+    """x (M,K) @ [w (K,N) + v (K,r) b (N,r)^T] -> (M,N).
+
+    ``return_p=True`` additionally returns p = x V (M,r) — the projected
+    activation the training backward pass keeps as its only residual.
+    """
     M, K = x.shape
     N = w.shape[1]
     r = v.shape[1]
@@ -56,20 +82,38 @@ def lowrank_forward(x: Array, w: Array, v: Array, b: Array, *,
     n_k = K // bk
 
     grid = (M // bm, N // bn, n_k)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),
+        pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),
+    ]
+    scratch = [
+        pltpu.VMEM((bm, bn), jnp.float32),
+        pltpu.VMEM((bm, r), jnp.float32),
+    ]
+    if not return_p:
+        return pl.pallas_call(
+            functools.partial(_kernel, n_k=n_k),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(x, w, v, b)
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
+        functools.partial(_kernel_p, n_k=n_k),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),
-            pl.BlockSpec((bn, r), lambda i, j, k: (j, 0)),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, r), lambda i, j, k: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bm, bn), jnp.float32),
-            pltpu.VMEM((bm, r), jnp.float32),
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), x.dtype),
+            jax.ShapeDtypeStruct((M, r), x.dtype),
         ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(x, w, v, b)

@@ -54,7 +54,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, optimizer: str,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_cost.xla_cost(compiled)
     hlo = compiled.as_text()
     # loop-aware per-device cost (XLA's cost_analysis counts while bodies
     # once; ours multiplies by known_trip_count — see analysis/hlo_cost.py)

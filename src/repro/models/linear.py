@@ -26,6 +26,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..kernels import dispatch
+
 Array = jax.Array
 
 
@@ -58,27 +60,29 @@ class LRPack:
 
 @jax.custom_vjp
 def lowrank_matmul(x: Array, w: Array, b: Array, v: Array) -> Array:
-    """y = x @ w + (x @ v) @ b.T with projected-residual backward."""
-    return x @ w + (x @ v) @ b.T
+    """y = x @ w + (x @ v) @ b.T with projected-residual backward.
+
+    Both directions route through :mod:`repro.kernels.dispatch` — the fused
+    Pallas kernels on TPU (pad-to-tile for ragged shapes), the XLA reference
+    schedule elsewhere.
+    """
+    return dispatch.lowrank_forward(x, w, v, b)
 
 
 def _lowrank_matmul_fwd(x, w, b, v):
-    p = x @ v                     # (..., r) — the only saved activation
-    y = x @ w + p @ b.T
+    # p = x V (..., r) — the only saved activation; the fused kernel emits
+    # it from the VMEM-resident accumulator of the forward pass.
+    y, p = dispatch.lowrank_forward(x, w, v, b, return_p=True)
     return y, (p, w, b, v)
 
 
 def _lowrank_matmul_bwd(res, dy):
     p, w, b, v = res
-    # dB = dy^T p, contracting all leading (batch/seq) axes.
-    nb = dy.ndim - 1
-    db = jax.lax.dot_general(
-        dy, p, (((tuple(range(nb)),) * 2), ((), ())),
-        preferred_element_type=jnp.float32).astype(b.dtype)
-    # dx = dy @ (w + v b^T)^T = dy @ w^T + (dy @ b) @ v^T
-    dx = dy @ w.T + (dy @ b) @ v.T
+    # One pass over dy tiles: dx = dy w^T + (dy b) v^T and dB = dy^T p
+    # (dB contracts every leading batch/seq axis).
+    dx, db = dispatch.lowrank_backward(dy, w, v, b, p)
     # w, v frozen in inner steps -> symbolic-ish zeros (DCE'd by XLA).
-    return dx, jnp.zeros_like(w), db, jnp.zeros_like(v)
+    return dx, jnp.zeros_like(w), db.astype(b.dtype), jnp.zeros_like(v)
 
 
 lowrank_matmul.defvjp(_lowrank_matmul_fwd, _lowrank_matmul_bwd)

@@ -1,0 +1,284 @@
+"""Kernel dispatch layer tests.
+
+Covers the ISSUE-1 acceptance criteria:
+  * ragged (non-multiple-of-128) shapes agree with kernels/ref.py on BOTH
+    the padded-Pallas(interpret) route and the XLA fallback route;
+  * the fused backward matches jax.grad of the reference forward to fp32
+    tolerance;
+  * lowrank_matmul fwd+bwd, inner_update, and outer_merge_resample really
+    flow through kernels/dispatch.py (verified by monkeypatching TABLE).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig
+from repro.kernels import dispatch, ref
+from repro.models.linear import lowrank_matmul
+from repro.optim import subspace
+
+RNG = np.random.default_rng(7)
+
+RAGGED = [(5, 7, 9, 3), (33, 130, 65, 5), (200, 257, 96, 17)]
+ALIGNED = [(128, 128, 128, 8), (256, 384, 256, 32)]
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+def _ops(m, k, n, r, dtype=jnp.float32):
+    return (_arr((m, k), dtype), _arr((k, n), dtype), _arr((k, r), dtype),
+            _arr((n, r), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Ragged shapes == ref on both routes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,r", RAGGED + ALIGNED)
+@pytest.mark.parametrize("route", ["pallas", "xla"])
+def test_forward_matches_ref(m, k, n, r, route, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", route)
+    x, w, v, b = _ops(m, k, n, r)
+    y, p = dispatch.lowrank_forward(x, w, v, b, return_p=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.lowrank_forward(x, w, v, b)),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(x @ v),
+                               rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("m,k,n,r", RAGGED + ALIGNED)
+@pytest.mark.parametrize("route", ["pallas", "xla"])
+def test_backward_matches_ref(m, k, n, r, route, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", route)
+    _, w, v, b = _ops(m, k, n, r)
+    dy, p = _arr((m, n)), _arr((m, r))
+    dx, db = dispatch.lowrank_backward(dy, w, v, b, p)
+    np.testing.assert_allclose(
+        np.asarray(dx), np.asarray(dy @ w.T + (dy @ b) @ v.T),
+        rtol=2e-4, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(db),
+                               np.asarray(dy).T @ np.asarray(p),
+                               rtol=2e-4, atol=5e-3)
+
+
+@pytest.mark.parametrize("m,k,n,r", [(40, 50, 60, 6), (128, 256, 128, 16)])
+@pytest.mark.parametrize("route", ["pallas", "xla"])
+def test_merge_project_adam_ragged(m, k, n, r, route, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", route)
+    _, w, v, b = _ops(m, k, n, r)
+    np.testing.assert_allclose(
+        np.asarray(dispatch.lowrank_merge(w, v, b)),
+        np.asarray(ref.lowrank_merge(w, v, b)), rtol=2e-4, atol=2e-3)
+    g = _arr((k, n))
+    np.testing.assert_allclose(
+        np.asarray(dispatch.lowrank_project(g, v[:, :r])),
+        np.asarray(ref.lowrank_project(g, v[:, :r])), rtol=2e-4, atol=2e-3)
+    bb, gg = _arr((n, r)), _arr((n, r))
+    mm, vv = jnp.abs(_arr((n, r), scale=0.1)), jnp.abs(_arr((n, r),
+                                                           scale=0.01))
+    got = dispatch.subspace_adam(bb, gg, mm, vv, lr=1e-3, step=5.0, wd=0.01)
+    want = ref.subspace_adam(bb, gg, mm, vv, lr=1e-3, beta1=0.9, beta2=0.999,
+                             eps=1e-8, wd=0.01, step=5.0)
+    for a, c in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_merge_stacked_experts_both_routes(monkeypatch):
+    """3-D (E, k, n) leaves merge correctly on the vmapped pallas route."""
+    w = _arr((3, 24, 40))
+    v = _arr((3, 24, 4))
+    b = _arr((3, 40, 4))
+    want = np.asarray(w) + np.einsum("ekr,enr->ekn", np.asarray(v),
+                                     np.asarray(b))
+    for route in ("pallas", "xla"):
+        monkeypatch.setenv("REPRO_KERNEL_DISPATCH", route)
+        np.testing.assert_allclose(np.asarray(dispatch.lowrank_merge(w, v, b)),
+                                   want, rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward == jax.grad of the reference forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,r", [(33, 65, 40, 5), (128, 128, 128, 16)])
+@pytest.mark.parametrize("route", ["pallas", "xla"])
+def test_custom_vjp_matches_autodiff_of_ref(m, k, n, r, route, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", route)
+    x, w, v, b = _ops(m, k, n, r)
+    co = _arr((m, n))
+
+    def f_disp(x, b):
+        return jnp.sum(lowrank_matmul(x, w, b, v) * co)
+
+    def f_ref(x, b):
+        return jnp.sum((x @ w + (x @ v) @ b.T) * co)
+
+    gx1, gb1 = jax.grad(f_disp, argnums=(0, 1))(x, b)
+    gx2, gb2 = jax.grad(f_ref, argnums=(0, 1))(x, b)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb2),
+                               rtol=2e-4, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=2e-4, atol=5e-3)
+
+
+def test_custom_vjp_batched_leading_dims(monkeypatch):
+    """(B, S, d) activations: leading dims flattened for the kernel and the
+    dB contraction covers every batch/seq axis."""
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "pallas")
+    B, S, k, n, r = 2, 9, 12, 10, 3
+    x = _arr((B, S, k))
+    w, v, b = _arr((k, n)), _arr((k, r)), _arr((n, r))
+    co = _arr((B, S, n))
+    gb1 = jax.grad(lambda b: jnp.sum(lowrank_matmul(x, w, b, v) * co))(b)
+    gb2 = jax.grad(lambda b: jnp.sum((x @ w + (x @ v) @ b.T) * co))(b)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb2),
+                               rtol=2e-4, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# The hot path really routes through the dispatch table
+# ---------------------------------------------------------------------------
+
+def _spy(table_entry, calls, key):
+    orig = table_entry[key]
+
+    def wrapper(*a, **kw):
+        calls.append(key)
+        return orig(*a, **kw)
+
+    return wrapper
+
+
+def test_lowrank_matmul_routes_through_dispatch(monkeypatch):
+    calls = []
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "xla")
+    monkeypatch.setitem(dispatch.TABLE["lowrank_forward"], "xla",
+                        _spy(dispatch.TABLE["lowrank_forward"], calls,
+                             "xla"))
+    monkeypatch.setitem(dispatch.TABLE["lowrank_backward"], "xla",
+                        _spy(dispatch.TABLE["lowrank_backward"], calls,
+                             "xla"))
+    x, w, v, b = _ops(8, 12, 10, 3)
+    jax.grad(lambda b: jnp.sum(lowrank_matmul(x, w, b, v)))(b)
+    assert len(calls) >= 2, "forward AND backward must go through TABLE"
+
+
+def _tiny_state():
+    tcfg = TrainConfig(optimizer="lowrank_adam", sampler="stiefel", rank=4,
+                       lazy_k=5, lr=1e-2, warmup_steps=0, total_steps=10,
+                       min_dim_for_lowrank=8, weight_decay=0.0,
+                       grad_clip=0.0, schedule="constant")
+    params = {"w1": _arr((16, 12)), "w2": _arr((16, 12)),
+              "w3": _arr((12, 10)), "bias": _arr((12,))}
+    state = subspace.init(params, tcfg, jax.random.key(0))
+    return tcfg, params, state
+
+
+def test_inner_update_routes_and_groups(monkeypatch):
+    """inner_update goes through TABLE['subspace_adam'] with same-shape B
+    leaves grouped into ONE stacked call."""
+    calls = []
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "xla")
+    orig = dispatch.TABLE["subspace_adam"]["xla"]
+
+    def spy(b2, *a, **kw):
+        calls.append(b2.shape)
+        return orig(b2, *a, **kw)
+
+    monkeypatch.setitem(dispatch.TABLE["subspace_adam"], "xla", spy)
+    tcfg, params, state = _tiny_state()
+    trainable = subspace.trainable_of(params, state)
+    grads = jax.tree.map(jnp.ones_like, trainable)
+    new_p, new_t, new_s, gn = subspace.inner_update(
+        grads, trainable, params, state, lr=1e-2, tcfg=tcfg)
+    # w1, w2 share B shape (12, 4) -> one stacked (2*12, 4) call;
+    # w3 B is (10, 4) -> its own call; bias is dense -> no call.
+    assert len(calls) == 2, calls
+    assert sorted(c[0] for c in calls) == [10, 24]
+
+
+def test_inner_update_matches_ref_adam(monkeypatch):
+    """Grouped/batched update == the plain per-leaf Adam formula."""
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "xla")
+    tcfg, params, state = _tiny_state()
+    trainable = subspace.trainable_of(params, state)
+    grads = jax.tree.map(
+        lambda t: jnp.asarray(RNG.normal(size=t.shape), t.dtype), trainable)
+    _, new_t, new_s, _ = subspace.inner_update(
+        grads, trainable, params, state, lr=1e-2, tcfg=tcfg)
+    for name in ("w1", "w2", "w3"):
+        slot = state.slots[name]
+        nb, nm, nv = ref.subspace_adam(
+            slot.b, grads[name], slot.m, slot.v, lr=1e-2, beta1=tcfg.beta1,
+            beta2=tcfg.beta2, eps=tcfg.eps, wd=0.0, step=1.0)
+        np.testing.assert_allclose(np.asarray(new_s.slots[name].b),
+                                   np.asarray(nb), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_s.slots[name].m),
+                                   np.asarray(nm), rtol=1e-5, atol=1e-6)
+
+
+def test_outer_merge_routes_through_dispatch(monkeypatch):
+    calls = []
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "xla")
+    orig = dispatch.TABLE["lowrank_merge"]["xla"]
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setitem(dispatch.TABLE["lowrank_merge"], "xla", spy)
+    tcfg, params, state = _tiny_state()
+    trainable = subspace.trainable_of(params, state)
+    grads = jax.tree.map(jnp.ones_like, trainable)
+    _, _, state, _ = subspace.inner_update(grads, trainable, params, state,
+                                           lr=1e-2, tcfg=tcfg)
+    new_params, new_state = subspace.outer_merge_resample(params, state,
+                                                          tcfg)
+    assert len(calls) == 3   # w1, w2, w3 low-rank leaves
+    # merge really applied: W' = W + V B^T
+    for name in ("w1", "w2", "w3"):
+        slot = state.slots[name]
+        want = np.asarray(params[name]) + np.asarray(
+            slot.proj) @ np.asarray(slot.b).T
+        np.testing.assert_allclose(np.asarray(new_params[name]), want,
+                                   rtol=1e-4, atol=1e-5)
+        assert float(jnp.abs(new_state.slots[name].b).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Route selection
+# ---------------------------------------------------------------------------
+
+def test_route_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "pallas")
+    assert dispatch.route("lowrank_forward",
+                          shapes=(8, 8, 8, 2)) == "pallas"
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "xla")
+    assert dispatch.route("lowrank_backward",
+                          shapes=(128, 128, 128, 8)) == "xla"
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "palas")  # typo: fail loudly
+    with pytest.raises(ValueError, match="REPRO_KERNEL_DISPATCH"):
+        dispatch.route("lowrank_forward", shapes=(8, 8, 8, 2))
+
+
+def test_route_auto_cpu_prefers_xla(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_DISPATCH", raising=False)
+    if jax.default_backend() != "tpu":
+        assert dispatch.route("lowrank_forward",
+                              shapes=(128, 128, 128, 8)) == "xla"
+
+
+def test_bf16_pallas_route(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "pallas")
+    x, w, v, b = _ops(24, 33, 40, 4, jnp.bfloat16)
+    y = dispatch.lowrank_forward(x, w, v, b)
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32),
+        np.asarray(ref.lowrank_forward(x, w, v, b), np.float32),
+        rtol=5e-2, atol=5e-2)
