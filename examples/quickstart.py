@@ -33,11 +33,10 @@ print(f"Adam state, low-rank   : {acct['adam_state_lowrank']:>10,} floats "
 
 # --- the projector satisfies the Theorem-2 optimality condition ------------
 state = subspace.init(params, tcfg, jax.random.key(1))
-slot = next(s for s in jax.tree.leaves(state.slots,
-                                       is_leaf=subspace._is_slot)
-            if isinstance(s, subspace.LowRankSlot))
-v = slot.proj
-while v.ndim > 2:       # layer-stacked projections: inspect one layer's V
+print(f"\ngrouped state: {len(state.groups)} groups over "
+      f"{sum(len(s.leaf_idx) for s in state.layout.groups)} low-rank leaves")
+v = state.groups[0].proj
+while v.ndim > 2:       # stacked projections: inspect one member's V
     v = v[0]
 n, r = v.shape[-2], v.shape[-1]
 vtv = v.T @ v

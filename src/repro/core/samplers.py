@@ -220,6 +220,82 @@ def dependent_diagonal(key: Array, diag_energy: Array, r: int, c: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
+# Batched samplers (structure-of-arrays subspace state)
+# ---------------------------------------------------------------------------
+#
+# The grouped optimizer state stores every same-shape projection stacked as
+# one (batch, n, r) array, so resampling at the outer step is ONE call here
+# instead of a Python loop over leaves with jax.random.split(key, n_leaves).
+
+def gaussian_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,
+                     dtype: jnp.dtype = jnp.float32) -> Array:
+    """(batch, n, r) of independent Gaussian projections in one draw."""
+    return jnp.sqrt(c / r) * jax.random.normal(key, (batch, n, r),
+                                               dtype=dtype)
+
+
+def stiefel_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,
+                    dtype: jnp.dtype = jnp.float32) -> Array:
+    """Haar-Stiefel (Algorithm 2) for a whole group: ONE batched thin QR
+    over (batch, n, r) instead of per-leaf QR calls."""
+    g = jax.random.normal(key, (batch, n, r), dtype=jnp.float32)
+    q, rmat = jnp.linalg.qr(g, mode="reduced")
+    d = jnp.sign(jnp.diagonal(rmat, axis1=-2, axis2=-1))   # (batch, r)
+    d = jnp.where(d == 0, 1.0, d)
+    u = q * d[..., None, :]
+    alpha = jnp.sqrt(c * n / r)
+    return (alpha * u).astype(dtype)
+
+
+def coordinate_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,
+                       dtype: jnp.dtype = jnp.float32) -> Array:
+    """Coordinate sampler (Algorithm 3) batched: one argsort over
+    (batch, n) uniforms, one scatter to build every selection matrix."""
+    perm = jnp.argsort(jax.random.uniform(key, (batch, n)), axis=-1)
+    idx = perm[:, :r]                                      # (batch, r)
+    alpha = jnp.asarray(jnp.sqrt(c * n / r), dtype)
+    rows = jnp.arange(batch)[:, None]
+    cols = jnp.arange(r)[None, :]
+    return jnp.zeros((batch, n, r), dtype).at[rows, idx, cols].set(alpha)
+
+
+def dependent_diagonal_batched(key: Array, diag_energy: Array, r: int,
+                               c: float = 1.0,
+                               dtype: jnp.dtype = jnp.float32) -> Array:
+    """Batched diagonal-Sigma Algorithm 4: vmapped water-filling + ONE
+    batched Madow systematic draw over (batch, n) energy rows."""
+    batch, n = diag_energy.shape
+    pi = jax.vmap(
+        lambda s: waterfill_inclusion_probs(jnp.maximum(s, 0.0), r)
+    )(diag_energy)                                         # (batch, n)
+    keys = jax.random.split(key, batch)
+    idx = jax.vmap(lambda kk, p: systematic_sample(kk, p, r))(keys, pi)
+    pi_sel = jnp.take_along_axis(pi, idx, axis=-1)         # (batch, r)
+    w = jnp.sqrt(c / jnp.maximum(pi_sel, 1e-12)).astype(dtype)
+    rows = jnp.arange(batch)[:, None]
+    cols = jnp.arange(r)[None, :]
+    return jnp.zeros((batch, n, r), dtype).at[rows, idx, cols].set(w)
+
+
+def sample_v_batched(name: str, key: Array, batch: int, n: int, r: int,
+                     c: float = 1.0, dtype: jnp.dtype = jnp.float32,
+                     **kw) -> Array:
+    """Batched dispatch: one (batch, n, r) draw for a whole group of
+    same-shape leaves ('gaussian' | 'stiefel' | 'coordinate' |
+    'dependent_diag' with diag_energy=(batch, n))."""
+    if name == "gaussian":
+        return gaussian_batched(key, batch, n, r, c=c, dtype=dtype)
+    if name == "stiefel":
+        return stiefel_batched(key, batch, n, r, c=c, dtype=dtype)
+    if name == "coordinate":
+        return coordinate_batched(key, batch, n, r, c=c, dtype=dtype)
+    if name == "dependent_diag":
+        return dependent_diagonal_batched(key, kw["diag_energy"], r, c=c,
+                                          dtype=dtype)
+    raise ValueError(f"unknown batched sampler '{name}'")
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 

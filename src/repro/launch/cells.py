@@ -69,11 +69,8 @@ def _param_shardings(mesh, cfg):
 
 
 def _opt_shardings(mesh, specs, opt_abs: subspace.SubspaceState):
-    slot_ps = rules.slot_pspecs(mesh, specs, opt_abs.slots)
-    slot_sh = rules.named_shardings(mesh, slot_ps)
-    rep = NamedSharding(mesh, P())
-    return subspace.SubspaceState(slots=slot_sh, step=rep, outer_step=rep,
-                                  key=rep)
+    return rules.named_shardings(mesh,
+                                 rules.state_pspecs(mesh, specs, opt_abs))
 
 
 def _batch_axes(mesh, b: int):

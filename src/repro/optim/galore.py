@@ -8,36 +8,38 @@ every step and full activations ARE stored — so it saves optimizer memory
 only, not gradient-estimation memory (the paper's Section 2 critique,
 which this implementation makes measurable: see benchmarks/memory_table).
 
-Shares the SubspaceState machinery; the projector is data-dependent
-(top-r left singular vectors of the latest full gradient) instead of a
-random admissible law — NOT unbiased in the paper's sense (Definition 3
-isotropy does not hold), which is exactly the theoretical gap the paper's
-random projectors close.
+Shares the grouped SubspaceState machinery: per group the stacked full
+gradients project through ``dispatch.lowrank_project`` (the same kernel
+path the paper's optimizer uses for its Thm.-1 lift), so both optimizers
+exercise identical kernels.  The projector is data-dependent (top-r left
+singular vectors of the latest full gradient) instead of a random
+admissible law — NOT unbiased in the paper's sense (Definition 3 isotropy
+does not hold), which is exactly the theoretical gap the paper's random
+projectors close.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import dispatch
 from .adamw import clip_by_global_norm
-from .subspace import (DenseSlot, LowRankSlot, SubspaceState, _is_slot,
-                       _rank_for)
+from .subspace import GroupedLowRankSlot, SubspaceState, _dense_adam
 
 Array = jax.Array
 
 
 def init(params, tcfg, key: Array) -> SubspaceState:
-    """Same slot layout as LowRankLazyAdam; V starts as zeros (first
-    refresh fills it from the first gradient)."""
+    """Same grouped slot layout as LowRankLazyAdam; V starts as zeros (the
+    first refresh fills it from the first gradient's SVD)."""
     from . import subspace
     state = subspace.init(params, tcfg, key)
-    # zero the projections: galore refreshes them from gradient SVD
-    flat, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
-    flat = [s._replace(proj=jnp.zeros_like(s.proj))
-            if isinstance(s, LowRankSlot) else s for s in flat]
-    return state._replace(slots=jax.tree.unflatten(treedef, flat))
+    groups = tuple(g._replace(proj=jnp.zeros_like(g.proj))
+                   for g in state.groups)
+    return dataclasses.replace(state, groups=groups)
 
 
 def _top_r_basis(g: Array, r: int) -> Array:
@@ -59,11 +61,13 @@ def value_and_full_grads(loss_fn, params, batch):
 
 
 def update(full_grads, params, state: SubspaceState, *, lr, tcfg,
-           refresh: bool) -> Tuple[Any, SubspaceState]:
+           refresh) -> Tuple[Any, SubspaceState]:
     """Adam on the projected gradient; lift the update back to W.
 
     GaLore updates W directly every step (no lazy B accumulation):
       R = U^T G ;  Adam(R) -> delta ;  W -= lr * U @ delta.
+    Per group the projection R runs as ONE batched
+    ``dispatch.lowrank_project`` call over the stacked gradients.
     """
     full_grads, _ = clip_by_global_norm(full_grads, tcfg.grad_clip)
     step = state.step + 1
@@ -71,48 +75,48 @@ def update(full_grads, params, state: SubspaceState, *, lr, tcfg,
     bc1 = 1.0 - b1 ** step.astype(jnp.float32)
     bc2 = 1.0 - b2 ** step.astype(jnp.float32)
 
-    flat_slots, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
-    flat_p = treedef.flatten_up_to(params)
-    flat_g = treedef.flatten_up_to(full_grads)
-    new_p, new_s = [], []
-    for slot, p, g in zip(flat_slots, flat_p, flat_g):
-        g32 = g.astype(jnp.float32)
-        if isinstance(slot, LowRankSlot):
-            r = slot.proj.shape[-1]
-            if slot.proj.ndim == 2:
-                proj = jax.lax.cond(
-                    refresh, lambda gg: _top_r_basis(gg, r),
-                    lambda gg: slot.proj, g32) if isinstance(refresh, jax.Array) \
-                    else (_top_r_basis(g32, r) if refresh else slot.proj)
-            else:  # stacked (L[,E], k, n): vmap the basis refresh
-                fn = _top_r_basis
-                for _ in range(slot.proj.ndim - 2):
-                    fn = jax.vmap(fn, in_axes=(0, None))
-                proj = fn(g32, r) if refresh else slot.proj
-            # project: R = U^T G  -> (n, r) convention: (g^T u)
-            rproj = jnp.einsum("...kn,...kr->...nr", g32, proj)
-            m = b1 * slot.m + (1 - b1) * rproj
-            v = b2 * slot.v + (1 - b2) * rproj * rproj
-            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-            lifted = jnp.einsum("...kr,...nr->...kn", proj, delta)
-            if tcfg.weight_decay:
-                lifted = lifted + tcfg.weight_decay * p.astype(jnp.float32)
-            new_p.append((p.astype(jnp.float32) - lr * lifted
-                          ).astype(p.dtype))
-            new_s.append(LowRankSlot(proj=proj, b=slot.b, m=m, v=v,
-                                     energy=slot.energy))
+    flat_p, pdef = jax.tree.flatten(params)
+    flat_g = pdef.flatten_up_to(full_grads)
+    new_flat_p = list(flat_p)
+
+    new_dense = []
+    for di, i in enumerate(state.layout.dense_idx):
+        new_p, slot = _dense_adam(state.dense[di], flat_p[i], flat_g[i],
+                                  lr=lr, bc1=bc1, bc2=bc2, tcfg=tcfg)
+        new_flat_p[i] = new_p
+        new_dense.append(slot)
+
+    new_groups = []
+    for spec, slot in zip(state.layout.groups, state.groups):
+        gs = jnp.stack([flat_g[i].astype(jnp.float32)
+                        for i in spec.leaf_idx])   # (G,)+lead+(k,n)
+        r = spec.rank
+        fn = _top_r_basis
+        for _ in range(gs.ndim - 2):
+            fn = jax.vmap(fn, in_axes=(0, None))
+        if isinstance(refresh, jax.Array):
+            proj = jax.lax.cond(refresh, lambda g: fn(g, r),
+                                lambda g: slot.proj, gs)
         else:
-            m = b1 * slot.m + (1 - b1) * g32
-            v = b2 * slot.v + (1 - b2) * g32 * g32
-            delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-            if tcfg.weight_decay and p.ndim >= 2:
-                delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
-            new_p.append((p.astype(jnp.float32) - lr * delta
-                          ).astype(p.dtype))
-            new_s.append(DenseSlot(m, v))
-    return (jax.tree.unflatten(treedef, new_p),
-            SubspaceState(jax.tree.unflatten(treedef, new_s), step,
-                          state.outer_step, state.key))
+            proj = fn(gs, r) if refresh else slot.proj
+        # project: R = U^T G -> (n, r), through the shared kernel path
+        rproj = dispatch.lowrank_project(gs, proj)
+        m = b1 * slot.m + (1 - b1) * rproj
+        v = b2 * slot.v + (1 - b2) * rproj * rproj
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        lifted = jnp.einsum("...kr,...nr->...kn", proj, delta)
+        ws = jnp.stack([flat_p[i].astype(jnp.float32)
+                        for i in spec.leaf_idx])
+        if tcfg.weight_decay:
+            lifted = lifted + tcfg.weight_decay * ws
+        new_ws = ws - lr * lifted
+        for j, i in enumerate(spec.leaf_idx):
+            new_flat_p[i] = new_ws[j].astype(flat_p[i].dtype)
+        new_groups.append(GroupedLowRankSlot(proj=proj, b=slot.b, m=m, v=v,
+                                             energy=slot.energy))
+    new_state = dataclasses.replace(state, dense=tuple(new_dense),
+                                    groups=tuple(new_groups), step=step)
+    return jax.tree.unflatten(pdef, new_flat_p), new_state
 
 
 def make_train_step(cfg, tcfg, loss_fn=None):

@@ -12,29 +12,45 @@ Two-level structure:
     (stiefel / coordinate / gaussian / dependent_diag per Section 5),
     zero B, reset (or project) the subspace moments.
 
+State layout — structure-of-arrays:
+  The subspace state is NOT one slot per param leaf.  All low-rank leaves
+  with the same weight shape and rank form a *group*, and the group's
+  B/m/v are stored pre-stacked as one ``(G,) + lead + (n_out, r)`` array
+  (V as ``(G,) + lead + (k, r)``, energy as ``(G, k)``) — exactly the
+  batched shape the Pallas subspace-Adam and merge kernels consume.  The
+  inner step therefore issues ZERO per-leaf stack/gather work: each group
+  feeds :func:`repro.kernels.dispatch.subspace_adam` directly, and
+  :func:`packed_params` scatters ``B[g]`` / ``V[g]`` slices into the
+  model-facing tree lazily (slices of the stacked buffer, not copies).
+  The index map from groups back to the param tree lives in a static
+  :class:`SubspaceLayout` carried as pytree *metadata* (aux data), so it
+  never turns into traced state and jit/donation see only the arrays.
+
 Leaf classification:
   * 2-D weights with min(dim) >= min_dim_for_lowrank and not name-excluded
-    -> LowRankSlot; convention W (k, n_out): V (k, r), B (n_out, r),
+    -> low-rank; convention W (k, n_out): V (k, r), B (n_out, r),
     effective weight W + V B^T.
   * 3-D stacked expert weights (E, k, n_out) -> per-expert V (E, k, r),
-    B (E, n_out, r) (vmapped sampler).
+    B (E, n_out, r) (batched sampler over the folded leading dims).
   * everything else -> DenseSlot (plain AdamW).
 
 For ``dependent_diag`` (the LLM-scale instance-dependent mode of DESIGN.md
-§7.4) each low-rank slot carries an EMA estimate of diag(Sigma) over the
-input dimension, updated from subspace gradients at O(k r^2) cost:
+§7.4) each group carries an EMA estimate of diag(Sigma) over the input
+dimension per member leaf, updated from subspace gradients at O(k r^2):
   diag(V dB^T dB V^T)_i = ((V M) * V).sum(-1),  M = dB^T dB.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import re
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core import samplers
-from ..kernels import dispatch
+from ..kernels import dispatch, ref
 from ..models.linear import LRPack
 from .adamw import clip_by_global_norm
 
@@ -49,6 +65,12 @@ class DenseSlot(NamedTuple):
 
 
 class LowRankSlot(NamedTuple):
+    """Per-leaf VIEW of one group member (legacy layout).
+
+    Only used at the edges: checkpoint migration from pre-grouped
+    checkpoints, tests, and introspection via :func:`leaf_slots` — the hot
+    path never materialises these.
+    """
     proj: Array       # V: (k, r) or (E, k, r) — fixed within an outer iter
     b: Array          # (n_out, r) or (E, n_out, r), fp32
     m: Array          # Adam moments over b
@@ -56,11 +78,53 @@ class LowRankSlot(NamedTuple):
     energy: Array     # (k,) EMA of diag(Sigma) (dependent_diag) or (0,)
 
 
-class SubspaceState(NamedTuple):
-    slots: Any        # tree matching params; leaves DenseSlot | LowRankSlot
+class GroupedLowRankSlot(NamedTuple):
+    """All same-shape low-rank leaves of one group, pre-stacked.
+
+    ``proj``: (G,) + lead + (k, r); ``b``/``m``/``v``: (G,) + lead +
+    (n_out, r) fp32; ``energy``: (G, k) fp32 (or (G, 0) when the sampler
+    carries no energy EMA).  Axis 0 indexes group members in the order of
+    the layout's ``leaf_idx``.
+    """
+    proj: Array
+    b: Array
+    m: Array
+    v: Array
+    energy: Array
+
+
+class GroupSpec(NamedTuple):
+    """Static description of one group (hashable pytree metadata)."""
+    shape: Tuple[int, ...]      # the member weight shape lead + (k, n_out)
+    rank: int
+    leaf_idx: Tuple[int, ...]   # member positions in params flat-leaf order
+
+
+class SubspaceLayout(NamedTuple):
+    """Static index map param-tree <-> grouped state (pytree metadata)."""
+    n_leaves: int
+    dense_idx: Tuple[int, ...]
+    groups: Tuple[GroupSpec, ...]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("dense", "groups", "step", "outer_step", "key"),
+    meta_fields=("layout",))
+@dataclasses.dataclass(frozen=True)
+class SubspaceState:
+    dense: Tuple[DenseSlot, ...]           # one per dense leaf (layout order)
+    groups: Tuple[GroupedLowRankSlot, ...]  # one per group (layout order)
     step: Array
     outer_step: Array
     key: Array
+    layout: SubspaceLayout                 # static aux data, not traced
+
+
+class Trainable(NamedTuple):
+    """The differentiation tree: stacked B per group, W per dense leaf."""
+    dense: Tuple[Array, ...]
+    groups: Tuple[Array, ...]
 
 
 def _path_str(path) -> str:
@@ -90,6 +154,30 @@ def _rank_for(shape, tcfg) -> int:
     return max(1, min(tcfg.rank, min(k, n_out) // 2))
 
 
+def build_layout(params, tcfg) -> SubspaceLayout:
+    """Classify leaves once; same-shape/same-rank low-rank leaves share a
+    group.  Pure Python over shapes — safe under jax.eval_shape."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    dense_idx = []
+    by_sig: dict = {}
+    for i, (path, x) in enumerate(leaves):
+        ps = _path_str(path)
+        if is_lowrank_leaf(ps, x, tcfg):
+            sig = (tuple(int(d) for d in x.shape), _rank_for(x.shape, tcfg))
+            by_sig.setdefault(sig, []).append(i)
+        else:
+            dense_idx.append(i)
+    groups = tuple(GroupSpec(shape=sig[0], rank=sig[1], leaf_idx=tuple(idx))
+                   for sig, idx in by_sig.items())
+    return SubspaceLayout(n_leaves=len(leaves), dense_idx=tuple(dense_idx),
+                          groups=groups)
+
+
+# ---------------------------------------------------------------------------
+# Sampling (grouped: one batched draw per group; per-leaf kept for the
+# ungrouped reference path and checkpoint migration)
+# ---------------------------------------------------------------------------
+
 def _sample_v(name, key, k_dim, r, c, energy=None, dtype=jnp.float32):
     if name == "dependent_diag":
         e = jnp.where(jnp.sum(energy) > 0, energy,
@@ -99,7 +187,8 @@ def _sample_v(name, key, k_dim, r, c, energy=None, dtype=jnp.float32):
 
 
 def _sample_proj(name, key, shape, r, c, energy, dtype=jnp.float32):
-    """V for a (k, n_out) leaf or per-expert for stacked leading dims."""
+    """Per-leaf V for a (k, n_out) leaf or per-expert for stacked leading
+    dims (reference path only — the hot path uses :func:`_sample_proj_group`)."""
     lead = shape[:-2]
     k_dim = shape[-2]
     if not lead:
@@ -117,33 +206,58 @@ def _sample_proj(name, key, shape, r, c, energy, dtype=jnp.float32):
     return vs.reshape(lead + (k_dim, r))
 
 
+def _sample_proj_group(name, key, spec: GroupSpec, n_members: int, c,
+                       energy, dtype=jnp.float32):
+    """One batched draw for a whole group: (G,) + lead + (k, r).
+
+    Leading expert/layer dims fold into the sample batch; for
+    ``dependent_diag`` each member's (k,) energy row is repeated across its
+    own leading dims (one EMA per leaf, as in the per-leaf layout).
+    """
+    lead = spec.shape[:-2]
+    k_dim = spec.shape[-2]
+    lead_n = 1
+    for d in lead:
+        lead_n *= d
+    batch = n_members * lead_n
+    kw = {}
+    if name == "dependent_diag":
+        e = jnp.where(jnp.sum(energy, axis=-1, keepdims=True) > 0, energy,
+                      jnp.ones_like(energy))      # per-member warm-up
+        kw["diag_energy"] = jnp.repeat(e, lead_n, axis=0) if lead_n > 1 else e
+    v = samplers.sample_v_batched(name, key, batch, k_dim, spec.rank, c=c,
+                                  dtype=dtype, **kw)
+    return v.reshape((n_members,) + lead + (k_dim, spec.rank))
+
+
 def init(params, tcfg, key: Array) -> SubspaceState:
-    """Classify leaves, sample initial projections, zero moments."""
-    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
-    treedef = jax.tree.structure(params)
-    keys = jax.random.split(key, len(leaves) + 1)
-    slot_leaves = []
-    for i, (path, x) in enumerate(leaves):
-        ps = _path_str(path)
-        if is_lowrank_leaf(ps, x, tcfg):
-            r = _rank_for(x.shape, tcfg)
-            lead = x.shape[:-2]
-            k_dim, n_out = x.shape[-2], x.shape[-1]
-            energy = jnp.zeros((k_dim,), jnp.float32) if \
-                tcfg.sampler == "dependent_diag" else jnp.zeros((0,))
-            proj = _sample_proj(tcfg.sampler, keys[i], x.shape, r, tcfg.c,
-                                energy)
-            b = jnp.zeros(lead + (n_out, r), jnp.float32)
-            slot_leaves.append(LowRankSlot(
-                proj=proj, b=b, m=jnp.zeros_like(b), v=jnp.zeros_like(b),
-                energy=energy))
-        else:
-            slot_leaves.append(DenseSlot(
-                m=jnp.zeros(x.shape, jnp.float32),
-                v=jnp.zeros(x.shape, jnp.float32)))
-    slots = jax.tree.unflatten(treedef, slot_leaves)
-    return SubspaceState(slots=slots, step=jnp.zeros((), jnp.int32),
-                         outer_step=jnp.zeros((), jnp.int32), key=keys[-1])
+    """Classify leaves, build the grouped layout, sample initial
+    projections (one batched draw per group), zero moments."""
+    layout = build_layout(params, tcfg)
+    flat_p = jax.tree.leaves(params)
+    keys = jax.random.split(key, len(layout.groups) + 1)
+    dense = tuple(
+        DenseSlot(m=jnp.zeros(flat_p[i].shape, jnp.float32),
+                  v=jnp.zeros(flat_p[i].shape, jnp.float32))
+        for i in layout.dense_idx)
+    groups = []
+    for g, spec in enumerate(layout.groups):
+        lead = spec.shape[:-2]
+        k_dim, n_out = spec.shape[-2], spec.shape[-1]
+        n_members = len(spec.leaf_idx)
+        energy = (jnp.zeros((n_members, k_dim), jnp.float32)
+                  if tcfg.sampler == "dependent_diag"
+                  else jnp.zeros((n_members, 0), jnp.float32))
+        proj = _sample_proj_group(tcfg.sampler, keys[g], spec, n_members,
+                                  tcfg.c, energy)
+        b = jnp.zeros((n_members,) + lead + (n_out, spec.rank), jnp.float32)
+        groups.append(GroupedLowRankSlot(
+            proj=proj, b=b, m=jnp.zeros_like(b), v=jnp.zeros_like(b),
+            energy=energy))
+    return SubspaceState(dense=dense, groups=tuple(groups),
+                         step=jnp.zeros((), jnp.int32),
+                         outer_step=jnp.zeros((), jnp.int32),
+                         key=keys[-1], layout=layout)
 
 
 # ---------------------------------------------------------------------------
@@ -151,109 +265,144 @@ def init(params, tcfg, key: Array) -> SubspaceState:
 # ---------------------------------------------------------------------------
 
 def _is_slot(x):
-    return isinstance(x, (DenseSlot, LowRankSlot))
+    return isinstance(x, (DenseSlot, LowRankSlot, GroupedLowRankSlot))
 
 
-def trainable_of(params, state: SubspaceState):
-    """The differentiation tree: B for low-rank leaves, W for dense ones."""
-    return jax.tree.map(
-        lambda slot, p: slot.b if isinstance(slot, LowRankSlot) else p,
-        state.slots, params, is_leaf=_is_slot)
+def trainable_of(params, state: SubspaceState) -> Trainable:
+    """The differentiation tree: the stacked B buffer of every group plus
+    the raw W of every dense leaf.  No copies — leaves are references."""
+    flat_p = jax.tree.leaves(params)
+    return Trainable(
+        dense=tuple(flat_p[i] for i in state.layout.dense_idx),
+        groups=tuple(g.b for g in state.groups))
 
 
-def packed_params(params, state: SubspaceState, trainable, dtype=None):
-    """Model-facing tree: LRPack(w, b, v) at low-rank leaves, the trainable
-    value at dense leaves."""
-    def pack(slot, p, t):
-        if isinstance(slot, LowRankSlot):
-            cast = (lambda x: x.astype(dtype)) if dtype else (lambda x: x)
-            return LRPack(p, cast(t), cast(slot.proj))
-        return t
-    return jax.tree.map(pack, state.slots, params, trainable,
-                        is_leaf=_is_slot)
+def packed_params(params, state: SubspaceState, trainable: Trainable,
+                  dtype=None):
+    """Model-facing tree: LRPack(w, B[g], V[g]) at low-rank leaves, the
+    trainable value at dense leaves.
+
+    ``B[g]`` / ``V[g]`` are *slices* of the group's stacked buffer (one
+    cast per group, then static-index slices) — under jit these alias the
+    donated group buffer instead of copying it.
+    """
+    cast = (lambda x: x.astype(dtype)) if dtype else (lambda x: x)
+    flat_p, treedef = jax.tree.flatten(params)
+    out = list(flat_p)
+    for di, i in enumerate(state.layout.dense_idx):
+        out[i] = trainable.dense[di]
+    for g, spec in enumerate(state.layout.groups):
+        tb = cast(trainable.groups[g])
+        tv = cast(state.groups[g].proj)
+        for j, i in enumerate(spec.leaf_idx):
+            out[i] = LRPack(flat_p[i], tb[j], tv[j])
+    return jax.tree.unflatten(treedef, out)
+
+
+def leaf_slots(state: SubspaceState) -> list:
+    """Per-leaf slot views in params flat-leaf order (introspection/tests):
+    LowRankSlot slices for grouped leaves, DenseSlot for the rest."""
+    out: list = [None] * state.layout.n_leaves
+    for di, i in enumerate(state.layout.dense_idx):
+        out[i] = state.dense[di]
+    for g, spec in enumerate(state.layout.groups):
+        slot = state.groups[g]
+        for j, i in enumerate(spec.leaf_idx):
+            out[i] = LowRankSlot(proj=slot.proj[j], b=slot.b[j],
+                                 m=slot.m[j], v=slot.v[j],
+                                 energy=slot.energy[j])
+    return out
+
+
+def slots_by_path(params, state: SubspaceState) -> dict:
+    """{'/path/to/leaf': per-leaf slot view} (introspection/tests)."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    views = leaf_slots(state)
+    return {_path_str(path): views[i] for i, (path, _) in enumerate(leaves)}
 
 
 # ---------------------------------------------------------------------------
 # Inner step (Algorithm 1, lines 5-6) — Adam over (B, dense) trainables
 # ---------------------------------------------------------------------------
 
-def _energy_update(slot: LowRankSlot, g32) -> Array:
-    """dependent_diag: EMA of diag(Sigma) from subspace grads, O(k r^2)."""
-    if not slot.energy.size:
+def _group_energy_update(slot: GroupedLowRankSlot, g32) -> Array:
+    """dependent_diag: EMA of diag(Sigma) from subspace grads, O(k r^2),
+    batched over the whole group (leading expert dims averaged per member)."""
+    if not slot.energy.shape[-1]:
         return slot.energy
     mm = jnp.einsum("...nr,...ns->...rs", g32, g32)
     e = jnp.einsum("...kr,...rs,...ks->...k", slot.proj, mm, slot.proj)
-    if e.ndim > 1:  # stacked experts: average
-        e = e.mean(axis=tuple(range(e.ndim - 1)))
+    if e.ndim > 2:  # (G,) + lead + (k,): average the stacked-expert dims
+        e = e.mean(axis=tuple(range(1, e.ndim - 1)))
     return 0.99 * slot.energy + 0.01 * e
 
 
-def inner_update(grads, trainable, params, state: SubspaceState, *,
-                 lr, tcfg) -> Tuple[Any, Any, SubspaceState, Array]:
+def _dense_adam(slot: DenseSlot, p, g, *, lr, bc1, bc2, tcfg):
+    g32 = g.astype(jnp.float32)
+    m = tcfg.beta1 * slot.m + (1 - tcfg.beta1) * g32
+    v = tcfg.beta2 * slot.v + (1 - tcfg.beta2) * g32 * g32
+    delta = (m / bc1) / (jnp.sqrt(v / bc2) + tcfg.eps)
+    if tcfg.weight_decay and p.ndim >= 2:
+        delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+    return new_p, DenseSlot(m, v)
+
+
+def inner_update(grads: Trainable, trainable: Trainable, params,
+                 state: SubspaceState, *, lr,
+                 tcfg) -> Tuple[Any, Trainable, SubspaceState, Array]:
     """One Adam step on the trainable tree.
 
     Returns (new_params, new_trainable, new_state, grad_norm).  Dense leaf
-    updates land in params; low-rank updates land in slots' B.
+    updates land in params; low-rank updates land in the groups' stacked B.
 
-    Low-rank leaves are grouped by B shape and each group runs ONE batched
-    ``subspace_adam`` call through the kernel dispatch layer (the Pallas
-    fused-Adam kernel over stacked B/m/v on TPU) instead of a per-leaf
-    Python loop of ~10 jnp ops each.
+    Every group's pre-stacked B/m/v feeds ONE batched ``subspace_adam``
+    call through the kernel dispatch layer (the Pallas fused-Adam kernel on
+    TPU) — no per-leaf stack/gather anywhere on this path.
     """
     grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
     step = state.step + 1
-    b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
     stepf = step.astype(jnp.float32)
-    bc1 = 1.0 - b1 ** stepf
-    bc2 = 1.0 - b2 ** stepf
+    bc1 = 1.0 - tcfg.beta1 ** stepf
+    bc2 = 1.0 - tcfg.beta2 ** stepf
 
-    flat_slots, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
-    flat_p = treedef.flatten_up_to(params)
-    flat_t = treedef.flatten_up_to(trainable)
-    flat_g = treedef.flatten_up_to(grads)
-
-    res: list = [None] * len(flat_slots)
+    flat_p, pdef = jax.tree.flatten(params)
+    new_flat_p = list(flat_p)
 
     # -- dense leaves: plain AdamW math (XLA fuses the elementwise chain) --
-    for i, (slot, p, g) in enumerate(zip(flat_slots, flat_p, flat_g)):
-        if isinstance(slot, LowRankSlot):
-            continue
-        g32 = g.astype(jnp.float32)
-        m = b1 * slot.m + (1 - b1) * g32
-        v = b2 * slot.v + (1 - b2) * g32 * g32
-        delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-        if tcfg.weight_decay and p.ndim >= 2:
-            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
-        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
-        res[i] = (new_p, new_p, DenseSlot(m, v))
+    new_dense = []
+    for di, i in enumerate(state.layout.dense_idx):
+        new_p, slot = _dense_adam(state.dense[di], flat_p[i],
+                                  grads.dense[di], lr=lr, bc1=bc1, bc2=bc2,
+                                  tcfg=tcfg)
+        new_flat_p[i] = new_p
+        new_dense.append(slot)
 
-    # -- low-rank leaves: group same-shape B's, one batched kernel each --
+    # -- low-rank groups: one batched kernel call per group ----------------
     # weight decay acts on the *effective* weight via the outer merge;
     # inside the subspace we decay B directly (equivalent to decaying the
     # increment — standard in GaLore-style training).
-    groups: dict = {}
-    for i, slot in enumerate(flat_slots):
-        if isinstance(slot, LowRankSlot):
-            groups.setdefault(flat_t[i].shape, []).append(i)
-    for idxs in groups.values():
-        bs = jnp.stack([flat_t[i] for i in idxs])
-        gs = jnp.stack([flat_g[i].astype(jnp.float32) for i in idxs])
-        ms = jnp.stack([flat_slots[i].m for i in idxs])
-        vs = jnp.stack([flat_slots[i].v for i in idxs])
+    new_groups, new_tgroups = [], []
+    for slot, g in zip(state.groups, grads.groups):
+        g32 = g.astype(jnp.float32)
         nb, nm, nv = dispatch.subspace_adam(
-            bs, gs, ms, vs, lr=lr, step=stepf, beta1=b1, beta2=b2, eps=eps,
+            slot.b, g32, slot.m, slot.v, lr=lr, step=stepf,
+            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
             wd=float(tcfg.weight_decay))
-        for j, i in enumerate(idxs):
-            slot = flat_slots[i]
-            res[i] = (flat_p[i], nb[j], LowRankSlot(
-                slot.proj, nb[j], nm[j], nv[j],
-                _energy_update(slot, gs[j])))
+        new_groups.append(GroupedLowRankSlot(
+            proj=slot.proj, b=nb, m=nm, v=nv,
+            energy=_group_energy_update(slot, g32)))
+        new_tgroups.append(nb)
 
-    new_params = jax.tree.unflatten(treedef, [r[0] for r in res])
-    new_trainable = jax.tree.unflatten(treedef, [r[1] for r in res])
-    new_slots = jax.tree.unflatten(treedef, [r[2] for r in res])
-    return new_params, new_trainable, SubspaceState(
-        new_slots, step, state.outer_step, state.key), gn
+    new_params = jax.tree.unflatten(pdef, new_flat_p)
+    new_trainable = Trainable(
+        dense=tuple(new_flat_p[i] for i in state.layout.dense_idx),
+        groups=tuple(new_tgroups))
+    new_state = SubspaceState(dense=tuple(new_dense),
+                              groups=tuple(new_groups), step=step,
+                              outer_step=state.outer_step, key=state.key,
+                              layout=state.layout)
+    return new_params, new_trainable, new_state, gn
 
 
 # ---------------------------------------------------------------------------
@@ -261,32 +410,132 @@ def inner_update(grads, trainable, params, state: SubspaceState, *,
 # ---------------------------------------------------------------------------
 
 def outer_merge_resample(params, state: SubspaceState, tcfg):
-    """W += V B^T (fp32 accumulate), resample V, zero B (+ moments)."""
+    """W += V B^T (fp32 accumulate), resample V, zero B (+ moments).
+
+    Per group: ONE batched merge over the stacked (G, ..., k, n) weights
+    and ONE batched sampler draw — the only per-leaf op left is stacking /
+    unstacking the weights themselves (the subspace state never unstacks).
+    """
     nkey, skey = jax.random.split(state.key)
-    flat_slots, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
-    flat_p = treedef.flatten_up_to(params)
-    keys = jax.random.split(skey, max(len(flat_slots), 1))
-    new_p, new_s = [], []
-    for i, (slot, p) in enumerate(zip(flat_slots, flat_p)):
-        if not isinstance(slot, LowRankSlot):
-            new_p.append(p)
-            new_s.append(slot)
-            continue
-        # fp32 W += V B^T through the dispatch layer (Pallas merge on TPU)
-        merged = dispatch.lowrank_merge(p, slot.proj, slot.b)
-        r = slot.proj.shape[-1]
-        proj = _sample_proj(tcfg.sampler, keys[i], p.shape, r, tcfg.c,
-                            slot.energy)
+    flat_p, pdef = jax.tree.flatten(params)
+    new_flat_p = list(flat_p)
+    gkeys = jax.random.split(skey, max(len(state.groups), 1))
+    new_groups = []
+    for g, (spec, slot) in enumerate(zip(state.layout.groups, state.groups)):
+        ws = jnp.stack([flat_p[i] for i in spec.leaf_idx])
+        merged = dispatch.lowrank_merge(ws, slot.proj, slot.b)
+        for j, i in enumerate(spec.leaf_idx):
+            new_flat_p[i] = merged[j]
+        proj = _sample_proj_group(tcfg.sampler, gkeys[g], spec,
+                                  len(spec.leaf_idx), tcfg.c, slot.energy)
         b = jnp.zeros_like(slot.b)
         if tcfg.reset_moments:
             m, v = jnp.zeros_like(b), jnp.zeros_like(b)
         else:
             m, v = slot.m, slot.v  # beyond-paper: carry moments across V
-        new_p.append(merged)
-        new_s.append(LowRankSlot(proj, b, m, v, slot.energy))
-    return (jax.tree.unflatten(treedef, new_p),
-            SubspaceState(jax.tree.unflatten(treedef, new_s),
-                          state.step, state.outer_step + 1, nkey))
+        new_groups.append(GroupedLowRankSlot(proj=proj, b=b, m=m, v=v,
+                                             energy=slot.energy))
+    new_state = SubspaceState(dense=state.dense, groups=tuple(new_groups),
+                              step=state.step,
+                              outer_step=state.outer_step + 1, key=nkey,
+                              layout=state.layout)
+    return jax.tree.unflatten(pdef, new_flat_p), new_state
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf reference implementations (tests + the "ungrouped" benchmark
+# baseline).  These reproduce the pre-grouped layout's behaviour: a Python
+# loop over leaves, per-leaf kernel calls, per-leaf key splits.  NOT the
+# hot path.
+# ---------------------------------------------------------------------------
+
+def inner_update_ref(grads: Trainable, trainable: Trainable, params,
+                     state: SubspaceState, *, lr, tcfg):
+    """Per-leaf reference of :func:`inner_update` (identical math, one
+    ``ref.subspace_adam`` call and one energy einsum per member leaf)."""
+    grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
+    step = state.step + 1
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - tcfg.beta1 ** stepf
+    bc2 = 1.0 - tcfg.beta2 ** stepf
+
+    flat_p, pdef = jax.tree.flatten(params)
+    new_flat_p = list(flat_p)
+    new_dense = []
+    for di, i in enumerate(state.layout.dense_idx):
+        new_p, slot = _dense_adam(state.dense[di], flat_p[i],
+                                  grads.dense[di], lr=lr, bc1=bc1, bc2=bc2,
+                                  tcfg=tcfg)
+        new_flat_p[i] = new_p
+        new_dense.append(slot)
+
+    new_groups, new_tgroups = [], []
+    for slot, g in zip(state.groups, grads.groups):
+        g32 = g.astype(jnp.float32)
+        outs = []
+        for j in range(g32.shape[0]):   # the per-leaf loop the grouped
+            outs.append(ref.subspace_adam(   # layout removes
+                slot.b[j], g32[j], slot.m[j], slot.v[j], lr=lr,
+                beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+                wd=float(tcfg.weight_decay), step=stepf))
+        nb = jnp.stack([o[0] for o in outs])
+        nm = jnp.stack([o[1] for o in outs])
+        nv = jnp.stack([o[2] for o in outs])
+        if slot.energy.shape[-1]:
+            es = []
+            for j in range(g32.shape[0]):
+                mm = jnp.einsum("...nr,...ns->...rs", g32[j], g32[j])
+                e = jnp.einsum("...kr,...rs,...ks->...k", slot.proj[j], mm,
+                               slot.proj[j])
+                if e.ndim > 1:
+                    e = e.mean(axis=tuple(range(e.ndim - 1)))
+                es.append(0.99 * slot.energy[j] + 0.01 * e)
+            energy = jnp.stack(es)
+        else:
+            energy = slot.energy
+        new_groups.append(GroupedLowRankSlot(proj=slot.proj, b=nb, m=nm,
+                                             v=nv, energy=energy))
+        new_tgroups.append(nb)
+
+    new_params = jax.tree.unflatten(pdef, new_flat_p)
+    new_trainable = Trainable(
+        dense=tuple(new_flat_p[i] for i in state.layout.dense_idx),
+        groups=tuple(new_tgroups))
+    new_state = SubspaceState(dense=tuple(new_dense),
+                              groups=tuple(new_groups), step=step,
+                              outer_step=state.outer_step, key=state.key,
+                              layout=state.layout)
+    return new_params, new_trainable, new_state, gn
+
+
+def outer_merge_resample_ref(params, state: SubspaceState, tcfg):
+    """Per-leaf reference of :func:`outer_merge_resample`: one merge and
+    one sampler draw per member leaf, ``jax.random.split(key, n_leaves)``."""
+    nkey, skey = jax.random.split(state.key)
+    flat_p, pdef = jax.tree.flatten(params)
+    new_flat_p = list(flat_p)
+    keys = jax.random.split(skey, max(state.layout.n_leaves, 1))
+    new_groups = []
+    for spec, slot in zip(state.layout.groups, state.groups):
+        projs = []
+        for j, i in enumerate(spec.leaf_idx):
+            merged = dispatch.lowrank_merge(flat_p[i], slot.proj[j],
+                                            slot.b[j])
+            new_flat_p[i] = merged
+            projs.append(_sample_proj(tcfg.sampler, keys[i], flat_p[i].shape,
+                                      spec.rank, tcfg.c, slot.energy[j]))
+        b = jnp.zeros_like(slot.b)
+        if tcfg.reset_moments:
+            m, v = jnp.zeros_like(b), jnp.zeros_like(b)
+        else:
+            m, v = slot.m, slot.v
+        new_groups.append(GroupedLowRankSlot(proj=jnp.stack(projs), b=b,
+                                             m=m, v=v, energy=slot.energy))
+    new_state = SubspaceState(dense=state.dense, groups=tuple(new_groups),
+                              step=state.step,
+                              outer_step=state.outer_step + 1, key=nkey,
+                              layout=state.layout)
+    return jax.tree.unflatten(pdef, new_flat_p), new_state
 
 
 def lowrank_param_count(params, tcfg) -> dict:

@@ -20,25 +20,24 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..models.linear import LRPack
 from . import subspace
-from .subspace import (DenseSlot, LowRankSlot, SubspaceState, _is_slot,
-                       packed_params, trainable_of)
+from .subspace import (SubspaceState, Trainable, packed_params,
+                       trainable_of)
 
 Array = jax.Array
 
 
-def _sample_noise(state: SubspaceState, key: Array, vanilla_shapes=None):
-    """One Z per trainable leaf (B-shaped for low-rank, W-shaped dense)."""
-    flat_slots, treedef = jax.tree.flatten(state.slots, is_leaf=_is_slot)
-    keys = jax.random.split(key, max(len(flat_slots), 1))
-    zs = []
-    for i, slot in enumerate(flat_slots):
-        if isinstance(slot, LowRankSlot):
-            zs.append(jax.random.normal(keys[i], slot.b.shape, jnp.float32))
-        else:
-            zs.append(jax.random.normal(keys[i], slot.m.shape, jnp.float32))
-    return jax.tree.unflatten(treedef, zs)
+def _sample_noise(state: SubspaceState, key: Array) -> Trainable:
+    """One Z per trainable buffer: a stacked B-shaped draw per group and a
+    W-shaped draw per dense leaf (one key per buffer, not per leaf)."""
+    n_dense = len(state.dense)
+    keys = jax.random.split(key, max(n_dense + len(state.groups), 1))
+    dense = tuple(jax.random.normal(keys[i], slot.m.shape, jnp.float32)
+                  for i, slot in enumerate(state.dense))
+    groups = tuple(
+        jax.random.normal(keys[n_dense + g], slot.b.shape, jnp.float32)
+        for g, slot in enumerate(state.groups))
+    return Trainable(dense=dense, groups=groups)
 
 
 def _perturbed(params, state, trainable, noise, sigma: float, sign: float,

@@ -1,2 +1,2 @@
-from .rules import (LOGICAL_TO_MESH, param_pspecs, slot_pspecs,
+from .rules import (LOGICAL_TO_MESH, param_pspecs, state_pspecs,
                     named_shardings, batch_pspec)  # noqa: F401

@@ -33,18 +33,101 @@ def _is_prng_key(x) -> bool:
         x.dtype, jax.dtypes.prng_key)
 
 
+def _key_str(p) -> str:
+    return str(p.key) if hasattr(p, "key") else \
+        (str(p.idx) if hasattr(p, "idx") else str(p.name))
+
+
 def _flatten(tree) -> dict:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
-        key = SEP.join(
-            str(p.key) if hasattr(p, "key") else
-            (str(p.idx) if hasattr(p, "idx") else str(p.name))
-            for p in path)
+        key = SEP.join(_key_str(p) for p in path)
         if _is_prng_key(leaf):  # typed PRNG keys serialise as raw data
             leaf = jax.random.key_data(leaf)
         out[key] = np.asarray(leaf)
     return out
+
+
+def _migrate_legacy_subspace(npz, manifest: dict, template: Any) -> dict:
+    """Loader-side migration: legacy per-leaf ``SubspaceState`` checkpoints
+    (one ``slots||<path>||{proj,b,m,v,energy}`` record per param leaf) are
+    re-stacked into the grouped structure-of-arrays layout on restore.
+
+    Returns ``{new_key: np.ndarray}`` for every grouped/dense state key the
+    template expects but the archive lacks — empty for non-legacy archives,
+    in which case nothing is materialised (``npz`` stays lazy).  Legacy
+    records are CRC-checked here (the migrated keys have no manifest entry
+    of their own) and validated against the template layout: the per-leaf
+    dense/low-rank classification and member shapes must match, so a
+    config change between save and restore fails loudly instead of mapping
+    the wrong arrays into slots.
+    """
+    from ..optim import subspace  # lazy: checkpointing stays model-agnostic
+    nodes = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: isinstance(x, subspace.SubspaceState))[0]
+    keys = list(npz.files)  # archive order == save-time flatten order
+    migrated: dict = {}
+    for path, node in nodes:
+        if not isinstance(node, subspace.SubspaceState):
+            continue
+        prefix = SEP.join(_key_str(p) for p in path)
+        pre = prefix + SEP if prefix else ""
+        if any(k.startswith(pre + "dense" + SEP) or
+               k.startswith(pre + "groups" + SEP) for k in keys):
+            continue  # already the grouped layout
+        legacy_prefix = pre + "slots" + SEP
+        legacy_keys = [k for k in keys if k.startswith(legacy_prefix)]
+        if not legacy_keys:
+            continue
+        data = {}
+        for k in legacy_keys:  # verify source integrity before re-stacking
+            data[k] = npz[k]
+            crc = zlib.crc32(data[k].tobytes())
+            if crc != manifest["crc"].get(k):
+                raise IOError(f"checkpoint corruption at legacy leaf {k!r}")
+        # Group the field records by leaf path, preserving archive order
+        # (== the params-tree flatten order the layout indexes refer to).
+        order, fields = [], {}
+        for k in legacy_keys:
+            leaf_key, field = k.rsplit(SEP, 1)
+            if leaf_key not in fields:
+                order.append(leaf_key)
+                fields[leaf_key] = {}
+            fields[leaf_key][field] = data[k]
+        layout = node.layout
+        if len(order) != layout.n_leaves:
+            raise IOError(
+                f"legacy checkpoint has {len(order)} subspace leaves, "
+                f"template layout expects {layout.n_leaves}")
+        for di, i in enumerate(layout.dense_idx):
+            if "proj" in fields[order[i]]:
+                raise IOError(
+                    f"legacy leaf {order[i]!r} is low-rank but the template "
+                    f"layout classifies it dense (config drift between "
+                    f"save and restore?)")
+            for f in ("m", "v"):
+                migrated[f"{pre}dense{SEP}{di}{SEP}{f}"] = fields[order[i]][f]
+        for g, spec in enumerate(layout.groups):
+            b_shape = spec.shape[:-2] + (spec.shape[-1], spec.rank)
+            v_shape = spec.shape[:-2] + (spec.shape[-2], spec.rank)
+            for i in spec.leaf_idx:
+                flds = fields[order[i]]
+                if "proj" not in flds:
+                    raise IOError(
+                        f"legacy leaf {order[i]!r} is dense but the "
+                        f"template layout groups it as low-rank (config "
+                        f"drift between save and restore?)")
+                if (tuple(flds["b"].shape) != b_shape or
+                        tuple(flds["proj"].shape) != v_shape):
+                    raise IOError(
+                        f"legacy leaf {order[i]!r} has B {flds['b'].shape} "
+                        f"/ V {flds['proj'].shape}, template group expects "
+                        f"B {b_shape} / V {v_shape}")
+            for f in ("proj", "b", "m", "v", "energy"):
+                migrated[f"{pre}groups{SEP}{g}{SEP}{f}"] = np.stack(
+                    [fields[order[i]][f] for i in spec.leaf_idx])
+    return migrated
 
 
 def save(workdir: str, step: int, tree: Any, *, keep: int = 3,
@@ -108,21 +191,25 @@ def restore(workdir: str, step: int, template: Any,
     path = os.path.join(workdir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    saved_keys = set(npz.files)
+    migrated = _migrate_legacy_subspace(npz, manifest, template)
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     flat_s = (treedef.flatten_up_to(shardings)
               if shardings is not None else [None] * len(flat_t))
     leaves = []
     for (pth, tleaf), shd in zip(flat_t, flat_s):
-        key = SEP.join(
-            str(p.key) if hasattr(p, "key") else
-            (str(p.idx) if hasattr(p, "idx") else str(p.name))
-            for p in pth)
-        arr = data[key]
-        crc = zlib.crc32(arr.tobytes())
-        if crc != manifest["crc"][key]:
-            raise IOError(f"checkpoint corruption at leaf {key!r} "
-                          f"(crc {crc} != {manifest['crc'][key]})")
+        key = SEP.join(_key_str(p) for p in pth)
+        if key in saved_keys:
+            arr = npz[key]  # lazy per-leaf load (no full materialisation)
+            crc = zlib.crc32(arr.tobytes())
+            if crc != manifest["crc"][key]:
+                raise IOError(f"checkpoint corruption at leaf {key!r} "
+                              f"(crc {crc} != {manifest['crc'][key]})")
+        elif key in migrated:  # legacy->grouped keys: sources CRC-checked
+            arr = migrated[key]
+        else:
+            raise IOError(f"checkpoint missing leaf {key!r}")
         if _is_prng_key(tleaf):
             leaves.append(jax.random.wrap_key_data(jax.numpy.asarray(arr)))
             continue

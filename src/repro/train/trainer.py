@@ -60,17 +60,26 @@ class Trainer:
         pkey, okey = jax.random.split(key)
         self.params = model.init_params(cfg, pkey)
 
+        # Donate (params, opt_state) into the jitted steps so the grouped
+        # state and weights update in place (no double-buffering of the
+        # stacked B/m/v or the model).  The caller rebinds self.params /
+        # self.opt_state to the outputs, so the donated buffers are never
+        # read again.  CPU has no donation support (XLA warns and copies) —
+        # skip there to keep test logs clean.
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
         if tcfg.optimizer == "adamw":
             self.opt_state = adamw.init(self.params)
             self._inner = jax.jit(steps_mod.make_adamw_train_step(
-                cfg, tcfg, loss_fn))
+                cfg, tcfg, loss_fn), donate_argnums=donate)
             self._outer = None
         elif tcfg.optimizer in ("lowrank_adam", "lowrank_lr"):
             self.opt_state = subspace.init(self.params, tcfg, okey)
             mk = (steps_mod.make_train_step if tcfg.optimizer ==
                   "lowrank_adam" else steps_mod.make_zo_train_step)
-            self._inner = jax.jit(mk(cfg, tcfg, loss_fn))
-            self._outer = jax.jit(steps_mod.make_outer_step(cfg, tcfg))
+            self._inner = jax.jit(mk(cfg, tcfg, loss_fn),
+                                  donate_argnums=donate)
+            self._outer = jax.jit(steps_mod.make_outer_step(cfg, tcfg),
+                                  donate_argnums=donate)
         else:
             raise ValueError(tcfg.optimizer)
         self.step = 0

@@ -211,14 +211,28 @@ def test_inner_update_matches_ref_adam(monkeypatch):
         lambda t: jnp.asarray(RNG.normal(size=t.shape), t.dtype), trainable)
     _, new_t, new_s, _ = subspace.inner_update(
         grads, trainable, params, state, lr=1e-2, tcfg=tcfg)
+    old = subspace.slots_by_path(params, state)
+    new = subspace.slots_by_path(params, new_s)
+    paths = [subspace._path_str(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(params)[0]]
+
+    def member_grad(name):
+        """The member's gradient row inside its group's stacked buffer."""
+        i = paths.index(f"/{name}")
+        for g, spec in enumerate(state.layout.groups):
+            if i in spec.leaf_idx:
+                return grads.groups[g][spec.leaf_idx.index(i)]
+        raise AssertionError(name)
+
     for name in ("w1", "w2", "w3"):
-        slot = state.slots[name]
+        slot = old[f"/{name}"]
         nb, nm, nv = ref.subspace_adam(
-            slot.b, grads[name], slot.m, slot.v, lr=1e-2, beta1=tcfg.beta1,
-            beta2=tcfg.beta2, eps=tcfg.eps, wd=0.0, step=1.0)
-        np.testing.assert_allclose(np.asarray(new_s.slots[name].b),
+            slot.b, member_grad(name), slot.m, slot.v, lr=1e-2,
+            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps, wd=0.0,
+            step=1.0)
+        np.testing.assert_allclose(np.asarray(new[f"/{name}"].b),
                                    np.asarray(nb), rtol=1e-5, atol=1e-6)
-        np.testing.assert_allclose(np.asarray(new_s.slots[name].m),
+        np.testing.assert_allclose(np.asarray(new[f"/{name}"].m),
                                    np.asarray(nm), rtol=1e-5, atol=1e-6)
 
 
@@ -239,15 +253,18 @@ def test_outer_merge_routes_through_dispatch(monkeypatch):
                                            lr=1e-2, tcfg=tcfg)
     new_params, new_state = subspace.outer_merge_resample(params, state,
                                                           tcfg)
-    assert len(calls) == 3   # w1, w2, w3 low-rank leaves
+    # one BATCHED merge per group ({w1, w2} share a group; w3 has its own)
+    assert len(calls) == len(state.groups) == 2
     # merge really applied: W' = W + V B^T
+    slots = subspace.slots_by_path(params, state)
+    new_slots = subspace.slots_by_path(params, new_state)
     for name in ("w1", "w2", "w3"):
-        slot = state.slots[name]
+        slot = slots[f"/{name}"]
         want = np.asarray(params[name]) + np.asarray(
             slot.proj) @ np.asarray(slot.b).T
         np.testing.assert_allclose(np.asarray(new_params[name]), want,
                                    rtol=1e-4, atol=1e-5)
-        assert float(jnp.abs(new_state.slots[name].b).sum()) == 0.0
+        assert float(jnp.abs(new_slots[f"/{name}"].b).sum()) == 0.0
 
 
 # ---------------------------------------------------------------------------

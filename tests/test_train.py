@@ -28,7 +28,8 @@ def _loader(batch=4, seq=32):
 
 def test_subspace_grad_equals_projected_dense_grad():
     """dL/dB == (dL/dW)^T V per low-rank leaf — the Thm.-1 lift identity,
-    verified through the full transformer + chunked-CE stack."""
+    verified through the full transformer + chunked-CE stack.  The grouped
+    trainable's stacked gradient rows must each equal the member's lift."""
     params = lm.init_params(CFG, jax.random.key(0))
     state = subspace.init(params, TCFG, jax.random.key(1))
     batch = _loader()(0)
@@ -41,19 +42,17 @@ def test_subspace_grad_equals_projected_dense_grad():
 
     grads_b = jax.grad(f_sub)(trainable)
     dense_grads = jax.grad(lambda p: loss_fn(p, batch))(params)
+    flat_gd = jax.tree.leaves(dense_grads)
 
-    flat_slots, treedef = jax.tree.flatten(state.slots,
-                                           is_leaf=subspace._is_slot)
-    flat_gb = treedef.flatten_up_to(grads_b)
-    flat_gd = treedef.flatten_up_to(dense_grads)
     checked = 0
-    for slot, gb, gd in zip(flat_slots, flat_gb, flat_gd):
-        if not isinstance(slot, subspace.LowRankSlot):
-            continue
-        want = jnp.einsum("...kn,...kr->...nr", gd, slot.proj)
-        np.testing.assert_allclose(np.asarray(gb), np.asarray(want),
-                                   rtol=2e-3, atol=2e-5)
-        checked += 1
+    for g, spec in enumerate(state.layout.groups):
+        proj = state.groups[g].proj
+        for j, i in enumerate(spec.leaf_idx):
+            want = jnp.einsum("...kn,...kr->...nr", flat_gd[i], proj[j])
+            np.testing.assert_allclose(np.asarray(grads_b.groups[g][j]),
+                                       np.asarray(want),
+                                       rtol=2e-3, atol=2e-5)
+            checked += 1
     assert checked >= 4  # attn + mlp + unembed leaves
 
 
@@ -77,11 +76,8 @@ def test_outer_merge_preserves_function():
                                                  trainable2), batch))
     assert np.isclose(before, after, rtol=1e-4), (before, after)
     # and B is zeroed
-    for slot in jax.tree.leaves(
-            jax.tree.map(lambda s: s, state2.slots,
-                         is_leaf=subspace._is_slot)):
-        if isinstance(slot, subspace.LowRankSlot):
-            assert float(jnp.abs(slot.b).max()) == 0.0
+    for slot in state2.groups:
+        assert float(jnp.abs(slot.b).max()) == 0.0
 
 
 def test_outer_resample_changes_projection():
@@ -89,13 +85,8 @@ def test_outer_resample_changes_projection():
     state = subspace.init(params, TCFG, jax.random.key(1))
     outer = steps_mod.make_outer_step(CFG, TCFG)
     _, state2 = outer(params, state)
-    flat1 = [s.proj for s in jax.tree.leaves(
-        state.slots, is_leaf=subspace._is_slot)
-        if isinstance(s, subspace.LowRankSlot)]
-    flat2 = [s.proj for s in jax.tree.leaves(
-        state2.slots, is_leaf=subspace._is_slot)
-        if isinstance(s, subspace.LowRankSlot)]
-    diffs = [float(jnp.abs(a - b).max()) for a, b in zip(flat1, flat2)]
+    diffs = [float(jnp.abs(a.proj - b.proj).max())
+             for a, b in zip(state.groups, state2.groups)]
     assert all(d > 1e-3 for d in diffs)
 
 
