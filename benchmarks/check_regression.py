@@ -1,0 +1,97 @@
+"""Compare a fresh BENCH_kernels.json against the checked-in baseline.
+
+CI's bench-smoke job runs the kernel benchmark (REPRO_BENCH_FAST=1), then
+fails the build when the grouped inner/outer step regresses more than
+--tolerance (default 25%) versus the JSON committed at HEAD.
+
+The gate is host-independent: absolute wall-clock on a GitHub runner says
+more about the runner class than about the change, so each grouped column
+is normalized by a reference column measured IN THE SAME RUN (inner: the
+per-leaf reference layout; outer: the stack/unstack tree path) and the
+resulting ratio is compared against the baseline JSON's ratio.  A >25%
+ratio regression means the grouped layout's advantage itself eroded —
+exactly what the grouped-masters refactor is supposed to protect.
+Absolute times are printed for context but never gate.
+
+Usage:
+    python benchmarks/check_regression.py \
+        --baseline BENCH_kernels.json --fresh /tmp/bench_new.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# gated column -> same-run reference column it is normalized by
+GATED = {
+    "grouped_inner_ms": "ungrouped_inner_ms",
+    "grouped_outer_ms": "tree_outer_ms",
+}
+
+
+def _ratio(record: dict, key: str, ref_key: str):
+    value, ref = record.get(key), record.get(ref_key)
+    if value is None or not ref:
+        return None
+    return value / ref
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+    failures = []
+    base_g = baseline.get("grouped_state", {})
+    fresh_g = fresh.get("grouped_state", {})
+    for key, ref_key in GATED.items():
+        base_ratio = _ratio(base_g, key, ref_key)
+        fresh_ratio = _ratio(fresh_g, key, ref_key)
+        if base_ratio is None:
+            print(f"[skip] {key}: no baseline {key}/{ref_key} ratio")
+            continue
+        if fresh_ratio is None:
+            failures.append(f"{key}: missing from fresh run")
+            continue
+        rel = fresh_ratio / base_ratio
+        status = "FAIL" if rel > 1.0 + tolerance else "ok"
+        print(
+            f"[{status}] {key}/{ref_key}: {fresh_ratio:.3f} "
+            f"(abs {fresh_g[key]:.3f} ms) vs baseline {base_ratio:.3f} "
+            f"(abs {base_g[key]:.3f} ms) -> {rel:.2f}x, "
+            f"limit {1.0 + tolerance:.2f}x"
+        )
+        if rel > 1.0 + tolerance:
+            failures.append(
+                f"{key} regressed {rel:.2f}x relative to {ref_key} "
+                f"(ratio {fresh_ratio:.3f} vs baseline {base_ratio:.3f})"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--baseline", required=True)
+    parser.add_argument("--fresh", required=True)
+    parser.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_TOL", "0.25")),
+        help="allowed fractional ratio regression (0.25 = 25%%)",
+    )
+    args = parser.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = compare(baseline, fresh, args.tolerance)
+    if failures:
+        print("bench-smoke regression gate FAILED:")
+        for failure in failures:
+            print(f"  - {failure}")
+        return 1
+    print("bench-smoke regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

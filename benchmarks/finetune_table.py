@@ -10,12 +10,10 @@ Vanilla-IPA upper bound.  The paper's qualitative claims checked here:
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import TrainConfig, get_config

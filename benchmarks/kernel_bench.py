@@ -168,14 +168,20 @@ def bench_train_step() -> dict:
 
 
 def bench_grouped_state() -> dict:
-    """Structure-of-arrays state vs the per-leaf reference layout.
+    """Structure-of-arrays state AND master weights vs per-leaf layouts.
 
-    ``grouped_*`` runs the hot path (pre-stacked group buffers straight
-    into the batched kernels, batched outer merge+resample); ``ungrouped_*``
-    the per-leaf reference (``subspace.inner_update_ref`` /
-    ``outer_merge_resample_ref``): one kernel call, one energy einsum and
-    one sampler draw per leaf, plus the stack/unstack round-trip the
-    grouped layout removes.  Both are jitted, so the delta is pure layout.
+    ``grouped_*`` runs the hot path (GroupedParams + pre-stacked group
+    buffers straight into the batched kernels; the outer step is a pure
+    batched merge on the stacked weights — zero stack/unstack);
+    ``tree_outer_ms`` the raw-model-tree compat path (same batched merge
+    but with the per-group weight stack/unstack the grouped masters
+    retire — the pre-ISSUE-3 hot path, i.e. the "before" number);
+    ``weight_stack_unstack_ms`` isolates exactly that retired cost (one
+    jitted stack + unstack round-trip of all master weights);
+    ``ungrouped_*`` the per-leaf reference (``subspace.inner_update_ref``
+    / ``outer_merge_resample_ref``): one kernel call, one energy einsum
+    and one sampler draw per leaf.  All are jitted, so deltas are pure
+    layout.
     """
     from repro.configs import TrainConfig, get_config
     from repro.models import lm
@@ -187,7 +193,8 @@ def bench_grouped_state() -> dict:
                        min_dim_for_lowrank=64, schedule="constant")
     params = lm.init_params(cfg, jax.random.key(0))
     state = subspace.init(params, tcfg, jax.random.key(1))
-    trainable = subspace.trainable_of(params, state)
+    gp = subspace.group_params(params, state.layout)
+    trainable = subspace.trainable_of(gp, state)
     rng = np.random.default_rng(3)
     grads = jax.tree.map(
         lambda t: jnp.asarray(rng.normal(size=t.shape) * 1e-2, t.dtype),
@@ -198,18 +205,23 @@ def bench_grouped_state() -> dict:
     inner_u = jax.jit(lambda g, t, p, s: subspace.inner_update_ref(
         g, t, p, s, lr=1e-3, tcfg=tcfg))
     outer_g = jax.jit(lambda p, s: subspace.outer_merge_resample(p, s, tcfg))
+    outer_t = jax.jit(lambda p, s: subspace.outer_merge_resample(p, s, tcfg))
     outer_u = jax.jit(lambda p, s: subspace.outer_merge_resample_ref(
         p, s, tcfg))
+    stack_rt = jax.jit(lambda p: subspace.params_of(
+        subspace.group_params(p, state.layout)))
 
     # Per-call interleaved min: scheduler noise on shared CPU hosts swamps
     # back-to-back block timings, and whichever candidate runs second in a
     # block inherits warm caches.  Alternate single calls (order flipped
     # every round) and keep each candidate's best observation.
     cands = {
-        "grouped_inner_ms": (inner_g, (grads, trainable, params, state)),
+        "grouped_inner_ms": (inner_g, (grads, trainable, gp, state)),
         "ungrouped_inner_ms": (inner_u, (grads, trainable, params, state)),
-        "grouped_outer_ms": (outer_g, (params, state)),
+        "grouped_outer_ms": (outer_g, (gp, state)),
+        "tree_outer_ms": (outer_t, (params, state)),
         "ungrouped_outer_ms": (outer_u, (params, state)),
+        "weight_stack_unstack_ms": (stack_rt, (params,)),
     }
     best = {k: float("inf") for k in cands}
     for fn, args in cands.values():
@@ -237,9 +249,10 @@ def bench_grouped_state() -> dict:
     # IDENTICAL flops/bytes to the per-leaf layout — any ms delta is host
     # scheduling noise, not extra work
     hlo = {
-        "grouped_inner": _cost(inner_g, grads, trainable, params, state),
+        "grouped_inner": _cost(inner_g, grads, trainable, gp, state),
         "ungrouped_inner": _cost(inner_u, grads, trainable, params, state),
-        "grouped_outer": _cost(outer_g, params, state),
+        "grouped_outer": _cost(outer_g, gp, state),
+        "tree_outer": _cost(outer_t, params, state),
         "ungrouped_outer": _cost(outer_u, params, state),
     }
     out = {
@@ -254,8 +267,10 @@ def bench_grouped_state() -> dict:
           f"{out['n_groups']} groups): "
           f"inner {out['grouped_inner_ms']:.3f} vs "
           f"{out['ungrouped_inner_ms']:.3f} ms, "
-          f"outer {out['grouped_outer_ms']:.3f} vs "
-          f"{out['ungrouped_outer_ms']:.3f} ms")
+          f"outer {out['grouped_outer_ms']:.3f} (grouped W) vs "
+          f"{out['tree_outer_ms']:.3f} (tree W) vs "
+          f"{out['ungrouped_outer_ms']:.3f} ms (per-leaf), "
+          f"W stack/unstack alone {out['weight_stack_unstack_ms']:.3f} ms")
     return out
 
 

@@ -16,7 +16,6 @@ import os
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import TrainConfig, get_config
 from repro.models import lm

@@ -48,6 +48,16 @@ print(f"\nV^T V == (c n / r) I_r?  max dev "
 loader = StatelessLoader("lm", seed=0, batch=8, seq_len=64,
                          vocab=cfg.vocab_size)
 trainer = Trainer(cfg, tcfg, loader)
+
+# Master weights live GROUPED during training (same structure-of-arrays
+# layout as the optimizer state): each group of same-shape matrices is one
+# stacked buffer, so the outer merge W += V B^T runs batched with zero
+# per-leaf stack/unstack.  Ungroup only at the API boundary:
+print(f"\nmaster weights: {len(trainer.params.groups)} stacked group "
+      f"buffers + {len(trainer.params.dense)} dense leaves "
+      f"(trainer.model_params gives the model-shaped tree)")
+assert set(trainer.model_params) == set(params)
+
 report = trainer.run(60, log_every=10)
 print(f"\nloss {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
       f"over {report.steps_run} steps "

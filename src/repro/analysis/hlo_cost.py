@@ -22,7 +22,6 @@ Validated against XLA's own cost_analysis on loop-free modules
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple

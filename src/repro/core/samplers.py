@@ -25,8 +25,6 @@ searchsorted; there are no data-dependent shapes.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,11 +15,9 @@ meaningful).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

@@ -11,9 +11,7 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
-from . import ref
 from .lowrank_forward import lowrank_forward as _fwd
 from .lowrank_update import lowrank_merge as _merge, lowrank_project as _proj
 from .ssd_chunk import ssd_intra_chunk as _ssd

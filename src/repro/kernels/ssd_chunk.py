@@ -15,7 +15,6 @@ decay mask applied between them (DESIGN.md §3).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ Layout conventions:
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

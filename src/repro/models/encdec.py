@@ -9,7 +9,7 @@ learned for the decoder.  MLPs are GELU.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import ParamSpec, rms_norm, tree_abstract, tree_init, \
-    act_dtype, prm_dtype
+from .common import ParamSpec, rms_norm, tree_init, prm_dtype
 from .linear import linear
 from .lm import _attn_specs, _mlp_specs, _norm_spec, _stack, dense_block
 

@@ -3,7 +3,12 @@
 Every matmul weight in the model zoo is consumed through :func:`linear`.
 During low-rank (Algorithm 1) inner steps the trainer *packs* each trainable
 matrix ``W (k x n_out)`` together with its subspace state ``(B, V)`` into an
-:class:`LRPack`; the model code is oblivious.
+:class:`LRPack`; the model code is oblivious.  With grouped master weights
+(``optim.subspace.GroupedParams``) all three pack members are *slices* of
+their group's stacked ``(G, ...)`` buffer — the forward consumes these
+sliced views directly, so the model never forces the stacked weights to be
+unstacked (materialisation happens only at explicit API boundaries via
+``effective_weight`` / ``subspace.params_of``).
 
 The packed path evaluates
 
@@ -21,7 +26,8 @@ steps); XLA DCEs them because the trainer only differentiates w.r.t. ``B``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import functools as _functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,9 +92,6 @@ def _lowrank_matmul_bwd(res, dy):
 
 
 lowrank_matmul.defvjp(_lowrank_matmul_fwd, _lowrank_matmul_bwd)
-
-
-import functools as _functools
 
 
 @_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))

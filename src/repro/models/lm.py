@@ -16,12 +16,10 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .attention import (KVCache, blockwise_attention, cache_update,
                         decode_attention)
@@ -112,7 +110,6 @@ def _mlp_specs(cfg, d, ff):
 
 
 def _moe_specs(cfg, d):
-    dt = prm_dtype(cfg)
     e, f = cfg.num_experts, cfg.moe_d_ff
     s = {
         "router": ParamSpec((d, e), jnp.float32, ("embed", "expert"),
@@ -553,7 +550,6 @@ def decode_step(params, token, cfg, state: DecodeState,
                 extra_embeds=None):
     """One-token decode. token: (B, 1) int32. Returns (logits, new state)."""
     h = _embed(params, token, cfg, extra_embeds)
-    B = h.shape[0]
     pos = state.pos
     fam = cfg.family
     new_kv = state.kv

@@ -15,7 +15,7 @@ cell.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +61,6 @@ def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
 
 def causal_conv1d_step(x_new: Array, conv_state: Array, w: Array, b: Array):
     """One-token conv update. x_new: (B, Ch); conv_state: (B, K-1, Ch)."""
-    K = w.shape[0]
     window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,Ch)
     out = jnp.einsum("bkc,kc->bc", window, w) + b
     new_state = window[:, 1:, :]

@@ -42,6 +42,15 @@ def init(params, tcfg, key: Array) -> SubspaceState:
     return dataclasses.replace(state, groups=groups)
 
 
+def init_grouped(params, tcfg, key: Array):
+    """(GroupedParams, state) — grouped master weights, like the trainer's
+    LowRankLazyAdam entry: GaLore's per-step weight write then happens on
+    the stacked buffers with zero stack/unstack."""
+    from . import subspace
+    state = init(params, tcfg, key)
+    return subspace.group_params(params, state.layout), state
+
+
 def _top_r_basis(g: Array, r: int) -> Array:
     """Top-r right singular vectors of g (k x n) -> (k, r) basis.
 
@@ -56,7 +65,17 @@ def _top_r_basis(g: Array, r: int) -> Array:
 
 
 def value_and_full_grads(loss_fn, params, batch):
-    """GaLore's step 1: classical full backprop (the memory cost)."""
+    """GaLore's step 1: classical full backprop (the memory cost).
+
+    With grouped master weights the gradient arrives in the SAME grouped
+    layout (a ``GroupedParams`` cotangent whose ``groups[g]`` are already
+    stacked ``(G,)+lead+(k, n)`` buffers) — the per-group gradient stack
+    below disappears along with the weight stack.
+    """
+    from . import subspace
+    if isinstance(params, subspace.GroupedParams):
+        return jax.value_and_grad(
+            lambda gp: loss_fn(subspace.params_of(gp), batch))(params)
     return jax.value_and_grad(loss_fn)(params, batch)
 
 
@@ -67,29 +86,45 @@ def update(full_grads, params, state: SubspaceState, *, lr, tcfg,
     GaLore updates W directly every step (no lazy B accumulation):
       R = U^T G ;  Adam(R) -> delta ;  W -= lr * U @ delta.
     Per group the projection R runs as ONE batched
-    ``dispatch.lowrank_project`` call over the stacked gradients.
+    ``dispatch.lowrank_project`` call over the stacked gradients; on
+    grouped master weights the per-step weight write is a pure batched
+    subtract on the stacked buffer (no stack/unstack at all).
     """
+    from . import subspace
+    grouped = isinstance(params, subspace.GroupedParams)
     full_grads, _ = clip_by_global_norm(full_grads, tcfg.grad_clip)
     step = state.step + 1
     b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
     bc1 = 1.0 - b1 ** step.astype(jnp.float32)
     bc2 = 1.0 - b2 ** step.astype(jnp.float32)
 
-    flat_p, pdef = jax.tree.flatten(params)
-    flat_g = pdef.flatten_up_to(full_grads)
-    new_flat_p = list(flat_p)
+    if grouped:
+        dense_w, dense_g = params.dense, full_grads.dense
+    else:
+        flat_p, pdef = jax.tree.flatten(params)
+        flat_g = pdef.flatten_up_to(full_grads)
+        new_flat_p = list(flat_p)
+        dense_w = tuple(flat_p[i] for i in state.layout.dense_idx)
+        dense_g = tuple(flat_g[i] for i in state.layout.dense_idx)
 
-    new_dense = []
-    for di, i in enumerate(state.layout.dense_idx):
-        new_p, slot = _dense_adam(state.dense[di], flat_p[i], flat_g[i],
+    new_dense_w, new_dense = [], []
+    for di, (w, g) in enumerate(zip(dense_w, dense_g)):
+        new_p, slot = _dense_adam(state.dense[di], w, g,
                                   lr=lr, bc1=bc1, bc2=bc2, tcfg=tcfg)
-        new_flat_p[i] = new_p
+        new_dense_w.append(new_p)
         new_dense.append(slot)
 
-    new_groups = []
-    for spec, slot in zip(state.layout.groups, state.groups):
-        gs = jnp.stack([flat_g[i].astype(jnp.float32)
-                        for i in spec.leaf_idx])   # (G,)+lead+(k,n)
+    new_wgroups, new_groups = [], []
+    for g_i, (spec, slot) in enumerate(zip(state.layout.groups,
+                                           state.groups)):
+        if grouped:
+            gs = full_grads.groups[g_i].astype(jnp.float32)
+            ws = params.groups[g_i].astype(jnp.float32)
+        else:
+            gs = jnp.stack([flat_g[i].astype(jnp.float32)
+                            for i in spec.leaf_idx])   # (G,)+lead+(k,n)
+            ws = jnp.stack([flat_p[i].astype(jnp.float32)
+                            for i in spec.leaf_idx])
         r = spec.rank
         fn = _top_r_basis
         for _ in range(gs.ndim - 2):
@@ -105,17 +140,24 @@ def update(full_grads, params, state: SubspaceState, *, lr, tcfg,
         v = b2 * slot.v + (1 - b2) * rproj * rproj
         delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
         lifted = jnp.einsum("...kr,...nr->...kn", proj, delta)
-        ws = jnp.stack([flat_p[i].astype(jnp.float32)
-                        for i in spec.leaf_idx])
         if tcfg.weight_decay:
             lifted = lifted + tcfg.weight_decay * ws
         new_ws = ws - lr * lifted
-        for j, i in enumerate(spec.leaf_idx):
-            new_flat_p[i] = new_ws[j].astype(flat_p[i].dtype)
+        if grouped:
+            new_wgroups.append(new_ws.astype(params.groups[g_i].dtype))
+        else:
+            for j, i in enumerate(spec.leaf_idx):
+                new_flat_p[i] = new_ws[j].astype(flat_p[i].dtype)
         new_groups.append(GroupedLowRankSlot(proj=proj, b=slot.b, m=m, v=v,
                                              energy=slot.energy))
     new_state = dataclasses.replace(state, dense=tuple(new_dense),
                                     groups=tuple(new_groups), step=step)
+    if grouped:
+        return subspace.GroupedParams(
+            dense=tuple(new_dense_w), groups=tuple(new_wgroups),
+            layout=params.layout, treedef=params.treedef), new_state
+    for di, i in enumerate(state.layout.dense_idx):
+        new_flat_p[i] = new_dense_w[di]
     return jax.tree.unflatten(pdef, new_flat_p), new_state
 
 

@@ -26,6 +26,20 @@ State layout — structure-of-arrays:
   :class:`SubspaceLayout` carried as pytree *metadata* (aux data), so it
   never turns into traced state and jit/donation see only the arrays.
 
+Master-weight layout — grouped end-to-end:
+  The master weights mirror the state: :class:`GroupedParams` keeps every
+  group's member weights pre-stacked as one ``(G,) + lead + (k, n_out)``
+  buffer (non-grouped leaves pass through untouched in ``dense``), built
+  once by :func:`group_params` / :func:`init_grouped` and carried through
+  the whole training loop.  ``outer_merge_resample`` on a GroupedParams is
+  then a pure batched ``W += V B^T`` on the already-stacked buffer — zero
+  per-leaf stack/unstack anywhere in the outer step — and the inner step /
+  loss eval consume weight *slices* exactly the way :func:`packed_params`
+  already slices B/V.  :func:`params_of` rebuilds the model-shaped tree at
+  the API boundary (checkpoint templates, serving, introspection); every
+  public entry point here accepts either representation, with the raw-tree
+  path kept as the per-leaf-weights reference.
+
 Leaf classification:
   * 2-D weights with min(dim) >= min_dim_for_lowrank and not name-excluded
     -> low-rank; convention W (k, n_out): V (k, r), B (n_out, r),
@@ -121,6 +135,27 @@ class SubspaceState:
     layout: SubspaceLayout                 # static aux data, not traced
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("dense", "groups"),
+    meta_fields=("layout", "treedef"))
+@dataclasses.dataclass(frozen=True)
+class GroupedParams:
+    """Master weights in the grouped structure-of-arrays layout.
+
+    ``groups[g]``: the g-th group's member weights pre-stacked as
+    ``(G,) + lead + (k, n_out)`` (axis 0 in ``leaf_idx`` order — the same
+    stacking as :class:`GroupedLowRankSlot`); ``dense``: the non-grouped
+    leaves in ``layout.dense_idx`` order, untouched.  ``treedef`` (the
+    original model tree structure) and ``layout`` ride as static pytree
+    metadata so jit/donation see only the arrays.
+    """
+    dense: Tuple[Array, ...]
+    groups: Tuple[Array, ...]
+    layout: SubspaceLayout
+    treedef: Any
+
+
 class Trainable(NamedTuple):
     """The differentiation tree: stacked B per group, W per dense leaf."""
     dense: Tuple[Array, ...]
@@ -157,7 +192,7 @@ def _rank_for(shape, tcfg) -> int:
 def build_layout(params, tcfg) -> SubspaceLayout:
     """Classify leaves once; same-shape/same-rank low-rank leaves share a
     group.  Pure Python over shapes — safe under jax.eval_shape."""
-    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    leaves = jax.tree_util.tree_flatten_with_path(params_of(params))[0]
     dense_idx = []
     by_sig: dict = {}
     for i, (path, x) in enumerate(leaves):
@@ -233,6 +268,7 @@ def _sample_proj_group(name, key, spec: GroupSpec, n_members: int, c,
 def init(params, tcfg, key: Array) -> SubspaceState:
     """Classify leaves, build the grouped layout, sample initial
     projections (one batched draw per group), zero moments."""
+    params = params_of(params)
     layout = build_layout(params, tcfg)
     flat_p = jax.tree.leaves(params)
     keys = jax.random.split(key, len(layout.groups) + 1)
@@ -261,6 +297,57 @@ def init(params, tcfg, key: Array) -> SubspaceState:
 
 
 # ---------------------------------------------------------------------------
+# Grouped master weights: build once, slice everywhere, ungroup only at the
+# API boundary
+# ---------------------------------------------------------------------------
+
+def group_params(params, layout: SubspaceLayout) -> GroupedParams:
+    """Stack each group's member weights into one ``(G,)+lead+(k, n)``
+    buffer (ONE stack per group, at init time — the training loop never
+    stacks again).  Non-grouped leaves pass through untouched."""
+    if isinstance(params, GroupedParams):
+        return params
+    flat_p, treedef = jax.tree.flatten(params)
+    return GroupedParams(
+        dense=tuple(flat_p[i] for i in layout.dense_idx),
+        groups=tuple(jnp.stack([flat_p[i] for i in spec.leaf_idx])
+                     for spec in layout.groups),
+        layout=layout, treedef=treedef)
+
+
+def params_of(params):
+    """Model-shaped param tree from either representation.
+
+    For a :class:`GroupedParams` the grouped leaves are *slices* of the
+    stacked buffers (lazy under jit/eval_shape — no copy until a consumer
+    materialises them); raw trees pass through unchanged.  This is the
+    ungroup point for API boundaries (checkpoint templates, serving,
+    introspection) — the training loop itself never calls it.
+    """
+    if not isinstance(params, GroupedParams):
+        return params
+    out: list = [None] * params.layout.n_leaves
+    for di, i in enumerate(params.layout.dense_idx):
+        out[i] = params.dense[di]
+    for g, spec in enumerate(params.layout.groups):
+        wg = params.groups[g]
+        for j, i in enumerate(spec.leaf_idx):
+            out[i] = wg[j]
+    return jax.tree.unflatten(params.treedef, out)
+
+
+def init_grouped(params, tcfg, key: Array):
+    """One-call trainer entry: classify leaves, build the grouped state AND
+    the grouped master weights from the same layout.
+
+    Returns ``(grouped_params, state)`` — the canonical in-training
+    representation pair (both structure-of-arrays, both donatable).
+    """
+    state = init(params, tcfg, key)
+    return group_params(params, state.layout), state
+
+
+# ---------------------------------------------------------------------------
 # Packing and trainable extraction
 # ---------------------------------------------------------------------------
 
@@ -271,6 +358,9 @@ def _is_slot(x):
 def trainable_of(params, state: SubspaceState) -> Trainable:
     """The differentiation tree: the stacked B buffer of every group plus
     the raw W of every dense leaf.  No copies — leaves are references."""
+    if isinstance(params, GroupedParams):
+        return Trainable(dense=params.dense,
+                         groups=tuple(g.b for g in state.groups))
     flat_p = jax.tree.leaves(params)
     return Trainable(
         dense=tuple(flat_p[i] for i in state.layout.dense_idx),
@@ -284,18 +374,26 @@ def packed_params(params, state: SubspaceState, trainable: Trainable,
 
     ``B[g]`` / ``V[g]`` are *slices* of the group's stacked buffer (one
     cast per group, then static-index slices) — under jit these alias the
-    donated group buffer instead of copying it.
+    donated group buffer instead of copying it.  With grouped master
+    weights the base ``w`` of each LRPack is a slice of the stacked weight
+    buffer the same way.
     """
     cast = (lambda x: x.astype(dtype)) if dtype else (lambda x: x)
-    flat_p, treedef = jax.tree.flatten(params)
-    out = list(flat_p)
+    grouped = isinstance(params, GroupedParams)
+    if grouped:
+        treedef = params.treedef
+        out: list = [None] * state.layout.n_leaves
+    else:
+        flat_p, treedef = jax.tree.flatten(params)
+        out = list(flat_p)
     for di, i in enumerate(state.layout.dense_idx):
         out[i] = trainable.dense[di]
     for g, spec in enumerate(state.layout.groups):
         tb = cast(trainable.groups[g])
         tv = cast(state.groups[g].proj)
+        wg = params.groups[g] if grouped else None
         for j, i in enumerate(spec.leaf_idx):
-            out[i] = LRPack(flat_p[i], tb[j], tv[j])
+            out[i] = LRPack(wg[j] if grouped else flat_p[i], tb[j], tv[j])
     return jax.tree.unflatten(treedef, out)
 
 
@@ -316,7 +414,7 @@ def leaf_slots(state: SubspaceState) -> list:
 
 def slots_by_path(params, state: SubspaceState) -> dict:
     """{'/path/to/leaf': per-leaf slot view} (introspection/tests)."""
-    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    leaves = jax.tree_util.tree_flatten_with_path(params_of(params))[0]
     views = leaf_slots(state)
     return {_path_str(path): views[i] for i, (path, _) in enumerate(leaves)}
 
@@ -358,7 +456,9 @@ def inner_update(grads: Trainable, trainable: Trainable, params,
 
     Every group's pre-stacked B/m/v feeds ONE batched ``subspace_adam``
     call through the kernel dispatch layer (the Pallas fused-Adam kernel on
-    TPU) — no per-leaf stack/gather anywhere on this path.
+    TPU) — no per-leaf stack/gather anywhere on this path.  ``params`` may
+    be the model tree or a :class:`GroupedParams`; grouped master weights
+    stay stacked (and untouched — they only move at the outer merge).
     """
     grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
     step = state.step + 1
@@ -366,16 +466,20 @@ def inner_update(grads: Trainable, trainable: Trainable, params,
     bc1 = 1.0 - tcfg.beta1 ** stepf
     bc2 = 1.0 - tcfg.beta2 ** stepf
 
-    flat_p, pdef = jax.tree.flatten(params)
-    new_flat_p = list(flat_p)
+    grouped = isinstance(params, GroupedParams)
+    if grouped:
+        dense_w = params.dense
+    else:
+        flat_p, pdef = jax.tree.flatten(params)
+        dense_w = tuple(flat_p[i] for i in state.layout.dense_idx)
 
     # -- dense leaves: plain AdamW math (XLA fuses the elementwise chain) --
-    new_dense = []
-    for di, i in enumerate(state.layout.dense_idx):
-        new_p, slot = _dense_adam(state.dense[di], flat_p[i],
+    new_dense_w, new_dense = [], []
+    for di, w in enumerate(dense_w):
+        new_p, slot = _dense_adam(state.dense[di], w,
                                   grads.dense[di], lr=lr, bc1=bc1, bc2=bc2,
                                   tcfg=tcfg)
-        new_flat_p[i] = new_p
+        new_dense_w.append(new_p)
         new_dense.append(slot)
 
     # -- low-rank groups: one batched kernel call per group ----------------
@@ -394,9 +498,18 @@ def inner_update(grads: Trainable, trainable: Trainable, params,
             energy=_group_energy_update(slot, g32)))
         new_tgroups.append(nb)
 
-    new_params = jax.tree.unflatten(pdef, new_flat_p)
+    if grouped:
+        new_params = GroupedParams(dense=tuple(new_dense_w),
+                                   groups=params.groups,
+                                   layout=params.layout,
+                                   treedef=params.treedef)
+    else:
+        new_flat_p = list(flat_p)
+        for di, i in enumerate(state.layout.dense_idx):
+            new_flat_p[i] = new_dense_w[di]
+        new_params = jax.tree.unflatten(pdef, new_flat_p)
     new_trainable = Trainable(
-        dense=tuple(new_flat_p[i] for i in state.layout.dense_idx),
+        dense=tuple(new_dense_w),
         groups=tuple(new_tgroups))
     new_state = SubspaceState(dense=tuple(new_dense),
                               groups=tuple(new_groups), step=step,
@@ -412,20 +525,30 @@ def inner_update(grads: Trainable, trainable: Trainable, params,
 def outer_merge_resample(params, state: SubspaceState, tcfg):
     """W += V B^T (fp32 accumulate), resample V, zero B (+ moments).
 
-    Per group: ONE batched merge over the stacked (G, ..., k, n) weights
-    and ONE batched sampler draw — the only per-leaf op left is stacking /
-    unstacking the weights themselves (the subspace state never unstacks).
+    With grouped master weights (:class:`GroupedParams`) this is the pure
+    batched form: per group ONE ``lowrank_merge`` over the already-stacked
+    ``(G, ..., k, n)`` weight buffer and ONE batched sampler draw — zero
+    stack/unstack anywhere (asserted by jaxpr inspection in
+    tests/test_grouped_params.py).  On a raw model tree the member weights
+    are stacked/unstacked around the same batched merge (the per-leaf-
+    weights compat path; identical key schedule, bit-identical results).
     """
     nkey, skey = jax.random.split(state.key)
-    flat_p, pdef = jax.tree.flatten(params)
-    new_flat_p = list(flat_p)
+    grouped = isinstance(params, GroupedParams)
+    if not grouped:
+        flat_p, pdef = jax.tree.flatten(params)
+        new_flat_p = list(flat_p)
     gkeys = jax.random.split(skey, max(len(state.groups), 1))
-    new_groups = []
+    new_wgroups, new_groups = [], []
     for g, (spec, slot) in enumerate(zip(state.layout.groups, state.groups)):
-        ws = jnp.stack([flat_p[i] for i in spec.leaf_idx])
+        ws = params.groups[g] if grouped else \
+            jnp.stack([flat_p[i] for i in spec.leaf_idx])
         merged = dispatch.lowrank_merge(ws, slot.proj, slot.b)
-        for j, i in enumerate(spec.leaf_idx):
-            new_flat_p[i] = merged[j]
+        if grouped:
+            new_wgroups.append(merged)
+        else:
+            for j, i in enumerate(spec.leaf_idx):
+                new_flat_p[i] = merged[j]
         proj = _sample_proj_group(tcfg.sampler, gkeys[g], spec,
                                   len(spec.leaf_idx), tcfg.c, slot.energy)
         b = jnp.zeros_like(slot.b)
@@ -439,6 +562,10 @@ def outer_merge_resample(params, state: SubspaceState, tcfg):
                               step=state.step,
                               outer_step=state.outer_step + 1, key=nkey,
                               layout=state.layout)
+    if grouped:
+        return GroupedParams(dense=params.dense, groups=tuple(new_wgroups),
+                             layout=params.layout,
+                             treedef=params.treedef), new_state
     return jax.tree.unflatten(pdef, new_flat_p), new_state
 
 
@@ -446,7 +573,8 @@ def outer_merge_resample(params, state: SubspaceState, tcfg):
 # Per-leaf reference implementations (tests + the "ungrouped" benchmark
 # baseline).  These reproduce the pre-grouped layout's behaviour: a Python
 # loop over leaves, per-leaf kernel calls, per-leaf key splits.  NOT the
-# hot path.
+# hot path.  They consume the raw model tree only — ungroup with
+# :func:`params_of` first when comparing against a GroupedParams run.
 # ---------------------------------------------------------------------------
 
 def inner_update_ref(grads: Trainable, trainable: Trainable, params,
@@ -540,7 +668,7 @@ def outer_merge_resample_ref(params, state: SubspaceState, tcfg):
 
 def lowrank_param_count(params, tcfg) -> dict:
     """Memory accounting: optimizer-state floats for lowrank vs dense Adam."""
-    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    leaves = jax.tree_util.tree_flatten_with_path(params_of(params))[0]
     full = sum(int(jnp.size(x)) for _, x in leaves)
     lowrank_states = 0
     proj_states = 0

@@ -79,6 +79,30 @@ def param_pspecs(mesh: Mesh, specs) -> Any:
                         is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
+def grouped_param_pspecs(mesh: Mesh, specs, gparams) -> Any:
+    """PartitionSpecs for grouped master weights (``GroupedParams``).
+
+    Mirrors :func:`state_pspecs`'s rules for the weight buffers themselves:
+    each group's stacked ``(G,) + lead + (k, n)`` buffer gets the
+    member-consensus weight sharding with the group axis replicated (an
+    axis keeps its mesh assignment only when every member's own pspec
+    agrees); dense leaves shard exactly like their ungrouped weight.
+    Returns a ``GroupedParams`` whose leaves are PartitionSpecs — feed it
+    to :func:`named_shardings`.
+    """
+    flat_specs = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    layout = gparams.layout
+    dense = tuple(spec_pspec(mesh, flat_specs[i]) for i in layout.dense_idx)
+    groups = []
+    for spec in layout.groups:
+        member_ps = [spec_pspec(mesh, flat_specs[i]) for i in spec.leaf_idx]
+        parts = _consensus_parts(member_ps, len(spec.shape))
+        groups.append(P(*([None] + parts)))
+    return subspace.GroupedParams(dense=dense, groups=tuple(groups),
+                                  layout=layout, treedef=gparams.treedef)
+
+
 def _consensus_parts(pspecs, ndim: int):
     """Axis-wise agreement across a group's member specs: an axis keeps a
     mesh assignment only when every member agrees (else replicate)."""

@@ -130,6 +130,69 @@ def _migrate_legacy_subspace(npz, manifest: dict, template: Any) -> dict:
     return migrated
 
 
+def _migrate_legacy_grouped_params(npz, manifest: dict, template: Any) -> dict:
+    """Loader-side migration for grouped MASTER WEIGHTS: legacy checkpoints
+    stored one record per model leaf; a template that holds the weights
+    grouped (``GroupedParams``: per-group stacked ``groups||g`` buffers +
+    ``dense||i`` pass-through leaves) re-stacks the per-leaf records on
+    restore.
+
+    Mirrors :func:`_migrate_legacy_subspace`: returns ``{new_key: array}``
+    for every grouped key the template expects but the archive lacks (empty
+    for non-legacy archives).  Legacy records are CRC-checked here (the
+    migrated keys have no manifest entry of their own) and validated
+    against the template layout — leaf count and member shapes must match,
+    so a config change between save and restore fails loudly instead of
+    stacking the wrong arrays into a group.
+    """
+    from ..optim import subspace  # lazy: checkpointing stays model-agnostic
+    nodes = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: isinstance(x, subspace.GroupedParams))[0]
+    keys = list(npz.files)  # archive order == save-time flatten order
+    migrated: dict = {}
+    for path, node in nodes:
+        if not isinstance(node, subspace.GroupedParams):
+            continue
+        prefix = SEP.join(_key_str(p) for p in path)
+        pre = prefix + SEP if prefix else ""
+        if any(k.startswith(pre + "dense" + SEP) or
+               k.startswith(pre + "groups" + SEP) for k in keys):
+            continue  # already the grouped layout
+        layout = node.layout
+        order = [k for k in keys if k.startswith(pre)] if pre else keys
+        if len(order) != layout.n_leaves:
+            raise IOError(
+                f"legacy checkpoint has {len(order)} weight leaves under "
+                f"{prefix or '<root>'!r}, template layout expects "
+                f"{layout.n_leaves}")
+        data = {}
+        for k in order:  # verify source integrity before re-stacking
+            data[k] = npz[k]
+            crc = zlib.crc32(data[k].tobytes())
+            if crc != manifest["crc"].get(k):
+                raise IOError(f"checkpoint corruption at legacy weight {k!r}")
+        for di, i in enumerate(layout.dense_idx):
+            want = tuple(node.dense[di].shape)
+            if tuple(data[order[i]].shape) != want:
+                raise IOError(
+                    f"legacy weight {order[i]!r} has shape "
+                    f"{data[order[i]].shape}, template dense leaf expects "
+                    f"{want} (config drift between save and restore?)")
+        for g, spec in enumerate(layout.groups):
+            for i in spec.leaf_idx:
+                if tuple(data[order[i]].shape) != spec.shape:
+                    raise IOError(
+                        f"legacy weight {order[i]!r} has shape "
+                        f"{data[order[i]].shape}, template group expects "
+                        f"{spec.shape} (config drift between save and "
+                        f"restore?)")
+            migrated[f"{pre}groups{SEP}{g}"] = np.stack(
+                [data[order[i]] for i in spec.leaf_idx])
+        for di, i in enumerate(layout.dense_idx):
+            migrated[f"{pre}dense{SEP}{di}"] = data[order[i]]
+    return migrated
+
+
 def save(workdir: str, step: int, tree: Any, *, keep: int = 3,
          extra: Optional[dict] = None) -> str:
     os.makedirs(workdir, exist_ok=True)
@@ -194,6 +257,7 @@ def restore(workdir: str, step: int, template: Any,
     npz = np.load(os.path.join(path, "arrays.npz"))
     saved_keys = set(npz.files)
     migrated = _migrate_legacy_subspace(npz, manifest, template)
+    migrated.update(_migrate_legacy_grouped_params(npz, manifest, template))
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     flat_s = (treedef.flatten_up_to(shardings)
               if shardings is not None else [None] * len(flat_t))

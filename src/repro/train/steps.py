@@ -8,7 +8,6 @@ the forward-only LowRank-LR step; ``make_prefill_step`` /
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax
@@ -87,6 +86,9 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     pdt = _pack_dtype(cfg)
 
     def train_step(params, opt_state: subspace.SubspaceState, batch):
+        # ``params`` is either the model tree or (the Trainer's canonical
+        # in-training representation) a ``subspace.GroupedParams`` whose
+        # stacked weight buffers packed_params slices lazily per leaf.
         lr = _lr_at(tcfg, opt_state.step)
         trainable = subspace.trainable_of(params, opt_state)
 
@@ -174,7 +176,9 @@ def make_eval_step(cfg: ModelConfig, loss_fn: Optional[Callable] = None):
     loss_fn = loss_fn or build_loss_fn(cfg)
 
     def eval_step(params, batch):
-        return loss_fn(params, batch)
+        # grouped master weights ungroup here (lazy slices), at the API
+        # boundary — model code only ever sees the model-shaped tree
+        return loss_fn(subspace.params_of(params), batch)
 
     return eval_step
 

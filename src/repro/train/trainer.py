@@ -17,7 +17,7 @@ from __future__ import annotations
 import signal
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -73,7 +73,14 @@ class Trainer:
                 cfg, tcfg, loss_fn), donate_argnums=donate)
             self._outer = None
         elif tcfg.optimizer in ("lowrank_adam", "lowrank_lr"):
-            self.opt_state = subspace.init(self.params, tcfg, okey)
+            # Master weights live GROUPED (same structure-of-arrays layout
+            # as the subspace state, built once here) for the whole run:
+            # both jitted steps consume weight slices lazily and the outer
+            # merge is a pure batched W += V B^T on the stacked buffer —
+            # no per-leaf stack/unstack anywhere in the training loop.
+            # Ungroup only at the API boundary (self.model_params).
+            self.params, self.opt_state = subspace.init_grouped(
+                self.params, tcfg, okey)
             mk = (steps_mod.make_train_step if tcfg.optimizer ==
                   "lowrank_adam" else steps_mod.make_zo_train_step)
             self._inner = jax.jit(mk(cfg, tcfg, loss_fn),
@@ -83,6 +90,16 @@ class Trainer:
         else:
             raise ValueError(tcfg.optimizer)
         self.step = 0
+
+    @property
+    def model_params(self):
+        """Model-shaped param tree (the API boundary for eval/serving).
+
+        Low-rank runs hold master weights grouped (`subspace.GroupedParams`)
+        internally; this ungroups them into the model tree — slices of the
+        stacked buffers, so it is cheap to call.
+        """
+        return subspace.params_of(self.params)
 
     # -- fault tolerance ---------------------------------------------------
 

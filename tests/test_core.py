@@ -120,7 +120,6 @@ def test_systematic_sampling_marginals():
     idx = jax.vmap(lambda kk: samplers.systematic_sample(kk, pij, r))(keys)
     assert idx.shape == (k, r)
     # fixed size: all r indices distinct
-    counts = np.zeros(n)
     for row in np.asarray(idx[:200]):
         assert len(set(row.tolist())) == r
     binc = np.bincount(np.asarray(idx).ravel(), minlength=n)

@@ -64,7 +64,11 @@ def _prims(closed_jaxpr):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("sampler", ["stiefel", "dependent_diag"])
-def test_inner_update_jaxpr_has_no_stack_or_gather(sampler):
+def test_inner_update_jaxpr_has_no_stack_or_gather(sampler, monkeypatch):
+    # The assertion is about the grouped LAYOUT (no per-leaf stack/gather
+    # between kernels), not kernel internals: pin the XLA route — the
+    # Pallas pad-to-tile wrappers legitimately slice/pad inside the op.
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "xla")
     tcfg = _tcfg(sampler)
     params = _params()
     state = subspace.init(params, tcfg, jax.random.key(0))

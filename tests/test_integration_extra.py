@@ -1,9 +1,7 @@
 """Extra integration coverage: grouped MoE dispatch, dependent_diag
 training, lazy-K sweep, c<1 weak-unbiased training."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

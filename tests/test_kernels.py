@@ -1,6 +1,5 @@
 """Pallas kernel tests: shape/dtype sweeps vs the ref.py jnp oracles,
 executed in interpret mode (assignment requirement)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

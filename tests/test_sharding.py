@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis import hlo_cost, roofline
@@ -17,7 +16,6 @@ def _mesh11():
 
 
 def test_spec_pspec_divisibility_fallback():
-    mesh = _mesh11()
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

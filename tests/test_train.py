@@ -9,7 +9,7 @@ import pytest
 from repro.configs import TrainConfig, get_config
 from repro.data.synthetic import StatelessLoader, lm_batch
 from repro.models import lm
-from repro.optim import adamw, subspace
+from repro.optim import subspace
 from repro.train import checkpoint as ckpt
 from repro.train import steps as steps_mod
 from repro.train.trainer import Trainer
@@ -119,7 +119,7 @@ def test_checkpoint_resume_bitexact(tmp_path):
     wd = str(tmp_path / "ckpt")
     # run 8 steps with checkpoint every 4
     tr1 = Trainer(CFG, TCFG, _loader(), workdir=wd, checkpoint_every=4)
-    rep1 = tr1.run(8)
+    tr1.run(8)
     # fresh trainer resumes from step 8 checkpoint and continues
     tr2 = Trainer(CFG, TCFG, _loader(), workdir=wd, checkpoint_every=0)
     rep2 = tr2.run(4)
@@ -135,7 +135,7 @@ def test_checkpoint_integrity_detects_corruption(tmp_path):
     tree = {"a": jnp.arange(8, dtype=jnp.float32)}
     ckpt.save(wd, 1, tree)
     # corrupt the array file
-    import numpy as np_, zipfile
+    import numpy as np_
     path = os.path.join(wd, "step_00000001", "arrays.npz")
     data = dict(np_.load(path))
     data["a"] = data["a"] + 1
