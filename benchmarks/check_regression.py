@@ -39,8 +39,33 @@ def _ratio(record: dict, key: str, ref_key: str):
     return value / ref
 
 
-def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+def check_methods_registry(fresh: dict) -> list[str]:
+    """methods-registry gate: every timed section must record which
+    registered method produced its columns, and that tag must resolve
+    against the registry snapshot the same run recorded — so a paradigm
+    rename/removal cannot silently leave the bench timing a method that
+    no longer exists."""
     failures = []
+    avail = fresh.get("methods_available")
+    if not avail:
+        return ["methods_available missing from fresh run (kernel_bench "
+                "must record the registry snapshot)"]
+    for section in ("train_step", "grouped_state"):
+        tag = fresh.get(section, {}).get("method")
+        if tag is None:
+            failures.append(
+                f"{section}: no 'method' provenance tag in fresh run")
+        elif tag not in avail:
+            failures.append(
+                f"{section}: method {tag!r} not in the recorded registry "
+                f"({', '.join(avail)})")
+        else:
+            print(f"[ok] {section}: produced by registered method {tag!r}")
+    return failures
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+    failures = check_methods_registry(fresh)
     base_g = baseline.get("grouped_state", {})
     fresh_g = fresh.get("grouped_state", {})
     for key, ref_key in GATED.items():

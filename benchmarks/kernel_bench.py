@@ -127,21 +127,26 @@ def bench_ops() -> list:
 
 
 def bench_train_step() -> dict:
-    """End-to-end inner step: dispatch-routed vs XLA-pinned (same step)."""
+    """End-to-end inner step: dispatch-routed vs XLA-pinned (same step).
+
+    The step comes from the registered Method (init + inner step exactly
+    as the Trainer runs them, grouped master weights included), so the
+    recorded ``method`` provenance tag is true by construction.
+    """
+    from repro import methods
     from repro.configs import TrainConfig, get_config
     from repro.data.synthetic import lm_batch
     from repro.models import lm
-    from repro.optim import subspace
-    from repro.train import steps as steps_mod
 
     cfg = get_config("llama-tiny")
     tcfg = TrainConfig(optimizer="lowrank_adam", sampler="stiefel", rank=8,
                        lazy_k=10, lr=1e-3, warmup_steps=0, total_steps=100,
                        min_dim_for_lowrank=64, schedule="constant")
-    params = lm.init_params(cfg, jax.random.key(0))
-    opt = subspace.init(params, tcfg, jax.random.key(1))
+    method = methods.get(tcfg.optimizer)
+    params, opt = method.init(lm.init_params(cfg, jax.random.key(0)), tcfg,
+                              jax.random.key(1))
     batch = lm_batch(0, 0, batch=4, seq_len=64, vocab=cfg.vocab_size)
-    step = jax.jit(steps_mod.make_train_step(cfg, tcfg))
+    step = jax.jit(method.make_inner_step(cfg, tcfg))
 
     def run():
         p, o, metr = step(params, opt, batch)
@@ -154,7 +159,7 @@ def bench_train_step() -> dict:
         routed_ms = xla_ms
         if jax.default_backend() == "tpu":
             os.environ.pop("REPRO_KERNEL_DISPATCH", None)
-            step = jax.jit(steps_mod.make_train_step(cfg, tcfg))
+            step = jax.jit(method.make_inner_step(cfg, tcfg))
             routed_ms = 1e3 * _timeit(run, iters=5)
     finally:
         if prev is None:
@@ -163,6 +168,9 @@ def bench_train_step() -> dict:
             os.environ["REPRO_KERNEL_DISPATCH"] = prev
     return {"arch": "llama-tiny", "batch": 4, "seq": 64,
             "backend": jax.default_backend(),
+            # provenance: which registered method produced these columns
+            # (bench-smoke's methods-registry gate checks this)
+            "method": method.name,
             "inner_step_xla_ms": xla_ms,
             "inner_step_dispatch_ms": routed_ms}
 
@@ -191,6 +199,7 @@ def bench_grouped_state() -> dict:
     tcfg = TrainConfig(optimizer="lowrank_adam", sampler="stiefel", rank=8,
                        lazy_k=10, lr=1e-3, warmup_steps=0, total_steps=100,
                        min_dim_for_lowrank=64, schedule="constant")
+    method_name = tcfg.optimizer  # provenance tag stays true by construction
     params = lm.init_params(cfg, jax.random.key(0))
     state = subspace.init(params, tcfg, jax.random.key(1))
     gp = subspace.group_params(params, state.layout)
@@ -257,6 +266,9 @@ def bench_grouped_state() -> dict:
     }
     out = {
         "arch": "llama-tiny", "backend": jax.default_backend(),
+        # provenance: every timing column here exercises this method's
+        # machinery (bench-smoke's methods-registry gate)
+        "method": method_name,
         "n_groups": len(state.groups),
         "n_lowrank_leaves": sum(len(s.leaf_idx)
                                 for s in state.layout.groups),
@@ -283,8 +295,12 @@ def main(argv=None):
     # grouped-state comparison first: it is the most noise-sensitive and
     # deserves the freshest process state (interpret-mode Pallas runs in
     # bench_ops leave the allocator in a different regime)
+    from repro import methods
     grouped_state = bench_grouped_state()
     rec = {"backend": jax.default_backend(), "fast": FAST,
+           # the registry snapshot the per-section "method" tags must
+           # resolve against (asserted by check_regression.py in CI)
+           "methods_available": list(methods.available()),
            "ops": bench_ops(), "train_step": bench_train_step(),
            "grouped_state": grouped_state}
     with open(args.out, "w") as f:

@@ -1,8 +1,9 @@
 """Benchmark driver: one module per paper table/figure.
 
   toy_mse          -> Figures 2-5 (estimator MSE vs samplers/c/samples)
-  memory_table     -> Table 2 (peak training memory, 4 methods)
-  walltime_table   -> Table 3 (per-step wall clock, 4 methods)
+  memory_table     -> Table 2 (peak training memory, every registered
+                      method + the vanilla_lr ablation)
+  walltime_table   -> Table 3 (per-step wall clock, same method grid)
   finetune_table   -> Table 1 (LR fine-tuning accuracy across samplers)
   pretrain_curves  -> Figures 7-9 (Stiefel vs Gaussian LowRank-IPA)
   roofline_table   -> EXPERIMENTS.md §Roofline (from dry-run records)

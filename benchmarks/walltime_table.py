@@ -1,9 +1,12 @@
-"""Paper Table 3: per-step wall-clock of the four training methods.
+"""Paper Table 3: per-step wall-clock of every registered training method.
 
 CPU wall-clock on the scaled-down encoder.  Absolute numbers are
 CPU-specific; the *ordering* reproduces the paper's finding: LR-family
 (forward-only) steps are cheaper than BP-family steps, and the low-rank
-variants add only small overhead to their family baseline.
+variants add only small overhead to their family baseline.  Rows come
+from ``repro.methods.available()`` (registry-dispatched, GaLore included)
+plus the full-space-ZO ``vanilla_lr`` ablation — the same variant grid as
+``memory_table``.
 """
 from __future__ import annotations
 
@@ -13,26 +16,25 @@ from typing import Dict
 
 import jax
 
-from repro.configs import TrainConfig, get_config
+from repro import methods
+from repro.configs import get_config
 from repro.data.synthetic import lm_batch
 from repro.models import lm
-from repro.optim import adamw, subspace
-from repro.train import steps as steps_mod
+
+try:  # same registry-derived variant grid as the memory table
+    from .memory_table import variants  # package context (benchmarks.run)
+except ImportError:
+    from memory_table import variants   # script context
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
 
 
 def time_step(cfg, tcfg, batch, seq, iters=10) -> float:
+    method = methods.get(tcfg.optimizer)
     params = lm.init_params(cfg, jax.random.key(0))
     data = lm_batch(0, 0, batch=batch, seq_len=seq, vocab=cfg.vocab_size)
-    if tcfg.optimizer == "adamw":
-        opt = adamw.init(params)
-        step = jax.jit(steps_mod.make_adamw_train_step(cfg, tcfg))
-    else:
-        opt = subspace.init(params, tcfg, jax.random.key(1))
-        mk = (steps_mod.make_train_step if tcfg.optimizer == "lowrank_adam"
-              else steps_mod.make_zo_train_step)
-        step = jax.jit(mk(cfg, tcfg))
+    params, opt = method.init(params, tcfg, jax.random.key(1))
+    step = jax.jit(method.make_inner_step(cfg, tcfg))
     params, opt, _ = jax.block_until_ready(step(params, opt, data))  # warmup
     t0 = time.perf_counter()
     for _ in range(iters):
@@ -44,25 +46,14 @@ def time_step(cfg, tcfg, batch, seq, iters=10) -> float:
 def run() -> Dict:
     cfg = get_config("encoder-small").replace(num_layers=2 if FAST else 4)
     batch, seq = (8, 128) if FAST else (16, 256)
-    base = dict(rank=8, lazy_k=50, min_dim_for_lowrank=64,
-                total_steps=100, warmup_steps=0)
-    variants = {
-        "vanilla_ipa": TrainConfig(optimizer="adamw", **base),
-        "lowrank_ipa": TrainConfig(optimizer="lowrank_adam",
-                                   sampler="stiefel", **base),
-        "vanilla_lr": TrainConfig(optimizer="lowrank_lr", sampler="stiefel",
-                                  **{**base, "rank": 10**9,
-                                     "min_dim_for_lowrank": 10**9}),
-        "lowrank_lr": TrainConfig(optimizer="lowrank_lr", sampler="stiefel",
-                                  **base),
-    }
-    print("method,ms_per_step")
+    print("method,family,ms_per_step")
     out = {}
-    for name, tcfg in variants.items():
+    for name, tcfg in variants().items():
         ms = 1e3 * time_step(cfg, tcfg, batch, seq,
                              iters=5 if FAST else 20)
         out[name] = ms
-        print(f"{name},{ms:.1f}")
+        fam = methods.get(tcfg.optimizer).describe()["family"]
+        print(f"{name},{fam},{ms:.1f}")
     return out
 
 

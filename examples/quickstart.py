@@ -7,11 +7,32 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
+from repro import methods
 from repro.configs import TrainConfig, get_config
 from repro.data.synthetic import StatelessLoader
 from repro.models import lm
 from repro.optim import subspace
 from repro.train.trainer import Trainer
+
+# --- methods: every gradient-estimation paradigm is a registered Method ----
+# tcfg.optimizer resolves through repro.methods.get(name): the Method owns
+# state construction, the jitted inner/outer steps, sharding pspecs and the
+# checkpoint tag, so the Trainer / dry-run / benchmark tables never branch
+# on the name.  A new paradigm is one @methods.register("name") class away:
+#
+#     @methods.register("my_method")
+#     class MyMethod(methods.Method):
+#         name = "my_method"
+#         def init(self, params, tcfg, key): ...          # build state
+#         def make_inner_step(self, cfg, tcfg, loss_fn=None): ...
+#         def pspecs(self, mesh, specs, params_abs, opt_abs): ...
+#
+# and TrainConfig(optimizer="my_method") trains, lowers in the dry-run and
+# checkpoints (cross-method resume is refused via the manifest tag).
+print(f"registered methods: {', '.join(methods.available())}")
+for name in methods.available():
+    d = methods.get(name).describe()
+    print(f"  {name:13s} [{d['family']}] {d['gradient']}")
 
 cfg = get_config("llama-tiny")
 tcfg = TrainConfig(

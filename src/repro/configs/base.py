@@ -159,7 +159,9 @@ def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
 @dataclass(frozen=True)
 class TrainConfig:
     """Optimizer / run config (the paper's algorithmic knobs)."""
-    optimizer: str = "lowrank_adam"   # 'adamw' | 'lowrank_adam' | 'lowrank_lr'
+    optimizer: str = "lowrank_adam"   # any repro.methods registry name:
+                                      # 'adamw' | 'lowrank_adam' |
+                                      # 'lowrank_lr' | 'galore' | ...
     sampler: str = "stiefel"          # gaussian | stiefel | coordinate | dependent_diag
     rank: int = 128                   # projection rank r
     c: float = 1.0                    # weak-unbiasedness scale

@@ -290,7 +290,9 @@ def sample_v_batched(name: str, key: Array, batch: int, n: int, r: int,
     if name == "dependent_diag":
         return dependent_diagonal_batched(key, kw["diag_energy"], r, c=c,
                                           dtype=dtype)
-    raise ValueError(f"unknown batched sampler '{name}'")
+    raise ValueError(
+        f"unknown batched sampler {name!r}; available: "
+        f"{', '.join(available_batched())}")
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +306,18 @@ SAMPLERS = {
 }
 
 
+def available() -> tuple:
+    """Every sampler name :func:`sample_v` accepts, sorted (mirrors
+    ``repro.methods.available()`` — unknown names error listing this)."""
+    return tuple(sorted(tuple(SAMPLERS) + ("dependent", "dependent_diag")))
+
+
+def available_batched() -> tuple:
+    """Sampler names :func:`sample_v_batched` accepts ('dependent' needs a
+    full Sigma eigendecomposition and has no batched form)."""
+    return tuple(sorted(tuple(SAMPLERS) + ("dependent_diag",)))
+
+
 def sample_v(name: str, key: Array, n: int, r: int, c: float = 1.0,
              dtype: jnp.dtype = jnp.float32, **kw) -> Array:
     """Dispatch by sampler name ('gaussian' | 'stiefel' | 'coordinate' |
@@ -314,4 +328,5 @@ def sample_v(name: str, key: Array, n: int, r: int, c: float = 1.0,
         return dependent_from_sigma(key, kw["sigma_mat"], r, c=c, dtype=dtype)
     if name == "dependent_diag":
         return dependent_diagonal(key, kw["diag_energy"], r, c=c, dtype=dtype)
-    raise ValueError(f"unknown sampler '{name}'")
+    raise ValueError(
+        f"unknown sampler {name!r}; available: {', '.join(available())}")

@@ -26,10 +26,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs.base import ModelConfig, ShapeSpec, TrainConfig
 from ..models import encdec, lm
 from ..models.common import act_dtype
-from ..optim import subspace
 from ..sharding import rules
 from ..sharding import ctx as shard_ctx
 from ..train import steps as steps_mod
+from .. import methods
 
 Array = jax.Array
 
@@ -66,11 +66,6 @@ def _param_shardings(mesh, cfg):
     specs = model.param_specs(cfg)
     pspecs = rules.param_pspecs(mesh, specs)
     return specs, rules.named_shardings(mesh, pspecs)
-
-
-def _opt_shardings(mesh, specs, opt_abs: subspace.SubspaceState):
-    return rules.named_shardings(mesh,
-                                 rules.state_pspecs(mesh, specs, opt_abs))
 
 
 def _batch_axes(mesh, b: int):
@@ -178,31 +173,21 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
     if shape.kind == "train":
         batch_abs = _train_batch_abs(cfg, shape)
         batch_sh = _train_batch_shardings(mesh, cfg, batch_abs)
-        if tcfg.optimizer == "adamw":
-            from ..optim import adamw
-            step = steps_mod.make_adamw_train_step(cfg, tcfg)
-            opt_abs = jax.eval_shape(adamw.init, params_abs)
-            opt_sh = adamw.AdamWState(m=param_sh, v=param_sh,
-                                      step=_ns(mesh))
-            args = (params_abs, opt_abs, batch_abs)
-            shardings = (param_sh, opt_sh, batch_sh)
-            return step, args, shardings, meta
-        step = steps_mod.make_train_step(cfg, tcfg)
-        opt_abs = jax.eval_shape(
-            lambda p: subspace.init(p, tcfg, jax.random.key(0)),
-            params_abs)
-        opt_sh = _opt_shardings(mesh, specs, opt_abs)
-        # master weights enter the low-rank train step GROUPED (the
-        # Trainer's canonical layout): stacked abstractly from the same
-        # layout, sharded by member consensus with the G axis replicated —
-        # the compiled artifact proves the production (no stack/unstack)
-        # lowering.
-        gp_abs = jax.eval_shape(
-            lambda p: subspace.group_params(p, opt_abs.layout), params_abs)
-        gp_sh = rules.named_shardings(
-            mesh, rules.grouped_param_pspecs(mesh, specs, gp_abs))
-        args = (gp_abs, opt_abs, batch_abs)
-        shardings = (gp_sh, opt_sh, batch_sh)
+        # Registry dispatch: the Method owns its state construction (under
+        # eval_shape — low-rank paradigms enter the train step on GROUPED
+        # master weights, the Trainer's canonical layout, so the compiled
+        # artifact proves the production no-stack/unstack lowering), its
+        # inner step, and the pspecs of both trees.  Unknown optimizer
+        # names raise listing methods.available() — no silent fallthrough.
+        method = methods.get(tcfg.optimizer)
+        meta["method"] = method.name
+        step = method.make_inner_step(cfg, tcfg)
+        p_abs, opt_abs = jax.eval_shape(
+            lambda p: method.init(p, tcfg, jax.random.key(0)), params_abs)
+        p_ps, o_ps = method.pspecs(mesh, specs, p_abs, opt_abs)
+        args = (p_abs, opt_abs, batch_abs)
+        shardings = (rules.named_shardings(mesh, p_ps),
+                     rules.named_shardings(mesh, o_ps), batch_sh)
         return step, args, shardings, meta
 
     b = shape.global_batch

@@ -96,7 +96,9 @@ def main(argv=None):
     p.add_argument("--multi-pod", action="store_true")
     p.add_argument("--both-meshes", action="store_true")
     p.add_argument("--optimizer", default="",
-                   help="'' -> lowrank_adam (paper); 'adamw' -> baseline")
+                   help="'' -> lowrank_adam (paper); any registered "
+                        "method name (adamw | lowrank_lr | galore | ...) "
+                        "lowers its own train cell")
     p.add_argument("--out", default="")
     p.add_argument("--save-hlo", default="")
     p.add_argument("--continue-on-error", action="store_true")

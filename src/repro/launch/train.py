@@ -25,7 +25,9 @@ def main(argv=None):
     p.add_argument("--reduced", action="store_true",
                    help="use the smoke-test reduction of the arch")
     p.add_argument("--optimizer", default="lowrank_adam",
-                   choices=["lowrank_adam", "lowrank_lr", "adamw"])
+                   help="any method registered in repro.methods "
+                        "(adamw | lowrank_adam | lowrank_lr | galore | "
+                        "...); unknown names error listing the registry")
     p.add_argument("--sampler", default="stiefel",
                    choices=["stiefel", "coordinate", "gaussian",
                             "dependent_diag"])

@@ -1,0 +1,23 @@
+"""First-class gradient-estimation paradigms.
+
+``methods.get(tcfg.optimizer)`` resolves a :class:`~repro.methods.base.Method`
+— the single dispatch point for the Trainer, dry-run cells, checkpointing,
+sharding, and the benchmark tables.  Registering a new paradigm:
+
+    from repro.methods import Method, register
+
+    @register("my_method")
+    class MyMethod(Method):
+        name = "my_method"
+        def init(self, params, tcfg, key): ...
+        def make_inner_step(self, cfg, tcfg, loss_fn=None): ...
+        def pspecs(self, mesh, specs, params_abs, opt_abs): ...
+
+and ``TrainConfig(optimizer="my_method")`` trains/lowers/checkpoints
+everywhere — no consumer edits.
+"""
+from .base import Method  # noqa: F401
+from .registry import available, get, register  # noqa: F401
+
+# importing the implementation modules runs their @register decorators
+from . import adamw, galore, lowrank  # noqa: E402,F401

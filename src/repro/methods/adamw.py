@@ -1,0 +1,33 @@
+"""Vanilla IPA: full backprop + dense AdamW (the paper's memory ceiling)."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..optim import adamw
+from ..sharding import rules
+from ..train import steps as steps_mod
+from .base import Method
+from .registry import register
+
+
+@register("adamw")
+class AdamWMethod(Method):
+    name = "adamw"
+    family = "bp"
+
+    def init(self, params, tcfg, key):
+        return params, adamw.init(params)
+
+    def make_inner_step(self, cfg, tcfg,
+                        loss_fn: Optional[Callable] = None) -> Callable:
+        return steps_mod.make_adamw_train_step(cfg, tcfg, loss_fn)
+
+    def pspecs(self, mesh, specs, params_abs, opt_abs):
+        return rules.param_pspecs(mesh, specs), \
+            rules.adamw_state_pspecs(mesh, specs)
+
+    def describe(self):
+        return {**super().describe(),
+                "gradient": "full backprop (k x n materialised)",
+                "optimizer_state": "full m/v (2 floats per param)",
+                "projection": "none"}

@@ -1,0 +1,55 @@
+"""Method registry: name -> gradient-estimation paradigm.
+
+The paper's claim is that one projection design applies across gradient
+estimation paradigms (IPA/backprop, likelihood-ratio/ZO, and projection
+baselines like GaLore).  The registry makes that literal in code: every
+paradigm is a :class:`repro.methods.base.Method` registered under the
+``tcfg.optimizer`` name, and every consumer (Trainer, dry-run cells,
+checkpointing, sharding, benchmark tables) dispatches through
+:func:`get` — a new paradigm is one ``@register("name")`` away, not a new
+string-equality branch ladder duplicated across five files.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from .base import Method
+
+_REGISTRY: Dict[str, Method] = {}
+
+
+def register(name: str):
+    """Class decorator: instantiate and register a Method under ``name``.
+
+    The decorated class is constructed once (methods are stateless
+    strategy objects — all run state lives in ``(params, opt_state)``).
+    Re-registering a name overwrites it, so tests can stub paradigms.
+    """
+    def deco(cls):
+        method = cls()
+        if method.name != name:
+            raise ValueError(
+                f"method class {cls.__name__} declares name "
+                f"{method.name!r} but is registered as {name!r}")
+        _REGISTRY[name] = method
+        return cls
+    return deco
+
+
+def get(name: str) -> Method:
+    """Resolve a method by its ``tcfg.optimizer`` name.
+
+    Raises ``ValueError`` listing :func:`available` for unknown names —
+    never a silent fallthrough to some default paradigm.
+    """
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; available: "
+            f"{', '.join(available())}") from None
+
+
+def available() -> Tuple[str, ...]:
+    """Registered method names, sorted (the CLI / error-message listing)."""
+    return tuple(sorted(_REGISTRY))

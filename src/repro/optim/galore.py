@@ -162,9 +162,11 @@ def update(full_grads, params, state: SubspaceState, *, lr, tcfg,
 
 
 def make_train_step(cfg, tcfg, loss_fn=None):
-    """jit-able GaLore step; ``refresh`` decided by step % lazy_k outside
-    jit would retrace — we pass it as a traced bool via lax.cond-free
-    branch on the python side (two jitted variants is simplest)."""
+    """Standalone jit-able GaLore step with an explicit ``refresh`` bool
+    (the caller schedules the SVD cadence; two jitted variants is
+    simplest).  The Trainer path uses :func:`make_inner_step` instead,
+    which folds the cadence into the step as a traced condition —
+    ``tests/test_methods.py`` asserts both are bit-identical."""
     from ..train import steps as steps_mod
     loss_fn = loss_fn or steps_mod.build_loss_fn(cfg)
 
@@ -174,5 +176,32 @@ def make_train_step(cfg, tcfg, loss_fn=None):
         new_p, new_s = update(grads, params, opt_state, lr=lr, tcfg=tcfg,
                               refresh=refresh)
         return new_p, new_s, {"loss": loss}
+
+    return train_step
+
+
+def make_inner_step(cfg, tcfg, loss_fn=None):
+    """Trainer-facing step: ``(params, opt_state, batch) -> (params,
+    opt_state, metrics)``, the Method-protocol inner signature.
+
+    The SVD refresh fires when ``opt_state.step % lazy_k == 0`` as a
+    TRACED condition (``update`` lowers it through ``lax.cond``), so one
+    jitted function covers both branches — no retrace across the cadence
+    and no GaLore-specific scheduling in the Trainer.  ``step`` starts at
+    0 and rides in the checkpointed state, so the first call always
+    refreshes (proj is initialised to zeros) and resume keeps the cadence.
+    """
+    from ..train import steps as steps_mod
+    from .adamw import global_norm
+    loss_fn = loss_fn or steps_mod.build_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        lr = steps_mod._lr_at(tcfg, opt_state.step)
+        refresh = (opt_state.step % tcfg.lazy_k) == 0
+        loss, grads = value_and_full_grads(loss_fn, params, batch)
+        new_p, new_s = update(grads, params, opt_state, lr=lr, tcfg=tcfg,
+                              refresh=refresh)
+        return new_p, new_s, {"loss": loss, "grad_norm": global_norm(grads),
+                              "lr": lr}
 
     return train_step

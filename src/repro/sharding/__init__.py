@@ -1,2 +1,3 @@
-from .rules import (LOGICAL_TO_MESH, param_pspecs, state_pspecs,
-                    named_shardings, batch_pspec)  # noqa: F401
+from .rules import (LOGICAL_TO_MESH, adamw_state_pspecs, batch_pspec,
+                    grouped_param_pspecs, named_shardings, param_pspecs,
+                    state_pspecs)  # noqa: F401

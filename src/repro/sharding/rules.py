@@ -79,6 +79,16 @@ def param_pspecs(mesh: Mesh, specs) -> Any:
                         is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
+def adamw_state_pspecs(mesh: Mesh, specs) -> Any:
+    """PartitionSpecs for a dense ``AdamWState``: the fp32 moments shard
+    exactly like their weight, the step counter is replicated.  (The
+    adamw Method's half of the method-provided pspecs contract — see
+    :meth:`repro.methods.base.Method.pspecs`.)"""
+    from ..optim import adamw
+    pp = param_pspecs(mesh, specs)
+    return adamw.AdamWState(m=pp, v=pp, step=P())
+
+
 def grouped_param_pspecs(mesh: Mesh, specs, gparams) -> Any:
     """PartitionSpecs for grouped master weights (``GroupedParams``).
 

@@ -245,15 +245,31 @@ def latest_step(workdir: str) -> Optional[int]:
 
 
 def restore(workdir: str, step: int, template: Any,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, expect_method: Optional[str] = None) -> Any:
     """Fill ``template``'s treedef with saved leaves (CRC-verified).
 
     ``shardings``: optional matching tree of jax.sharding.Sharding — each
     leaf is device_put with its sharding (elastic restore onto any mesh).
+
+    ``expect_method``: the resuming run's method checkpoint-tag.  A
+    manifest written by a *different* method is refused up front with a
+    clear error — the state trees of different gradient-estimation
+    paradigms are not interchangeable, and without this check the mismatch
+    would surface as a cryptic missing-leaf IOError.  Manifests predating
+    the method tag (no ``extra.method``) restore as before.
     """
     path = os.path.join(workdir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    saved_method = (manifest.get("extra") or {}).get("method")
+    if (expect_method is not None and saved_method is not None
+            and saved_method != expect_method):
+        raise ValueError(
+            f"cross-method resume refused: checkpoint at step {step} was "
+            f"written by method {saved_method!r}, this run uses "
+            f"{expect_method!r}.  Method states are not interchangeable — "
+            f"resume with optimizer={saved_method!r} or start a fresh "
+            f"workdir.")
     npz = np.load(os.path.join(path, "arrays.npz"))
     saved_keys = set(npz.files)
     migrated = _migrate_legacy_subspace(npz, manifest, template)
@@ -288,8 +304,10 @@ def restore(workdir: str, step: int, template: Any,
     return tree, manifest
 
 
-def restore_latest(workdir: str, template: Any, shardings: Any = None):
+def restore_latest(workdir: str, template: Any, shardings: Any = None,
+                   expect_method: Optional[str] = None):
     step = latest_step(workdir)
     if step is None:
         return None, None
-    return restore(workdir, step, template, shardings)
+    return restore(workdir, step, template, shardings,
+                   expect_method=expect_method)

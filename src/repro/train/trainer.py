@@ -24,9 +24,9 @@ import numpy as np
 
 from ..configs.base import ModelConfig, TrainConfig
 from ..models import encdec, lm
-from ..optim import adamw, subspace
+from ..optim import subspace
+from .. import methods
 from . import checkpoint as ckpt
-from . import steps as steps_mod
 
 
 @dataclass
@@ -55,10 +55,18 @@ class Trainer:
         self.on_straggler = on_straggler
         self._preempt = False
 
+        # All paradigm-specific behaviour (state construction, inner/outer
+        # steps, checkpoint tag) comes from the registered Method — an
+        # unknown tcfg.optimizer raises here, listing methods.available(),
+        # BEFORE the expensive model param init.
+        self.method = methods.get(tcfg.optimizer)
+
         model = encdec if cfg.is_encoder_decoder else lm
         key = jax.random.key(tcfg.seed)
         pkey, okey = jax.random.split(key)
         self.params = model.init_params(cfg, pkey)
+        self.params, self.opt_state = self.method.init(
+            self.params, tcfg, okey)
 
         # Donate (params, opt_state) into the jitted steps so the grouped
         # state and weights update in place (no double-buffering of the
@@ -67,28 +75,12 @@ class Trainer:
         # read again.  CPU has no donation support (XLA warns and copies) —
         # skip there to keep test logs clean.
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
-        if tcfg.optimizer == "adamw":
-            self.opt_state = adamw.init(self.params)
-            self._inner = jax.jit(steps_mod.make_adamw_train_step(
-                cfg, tcfg, loss_fn), donate_argnums=donate)
-            self._outer = None
-        elif tcfg.optimizer in ("lowrank_adam", "lowrank_lr"):
-            # Master weights live GROUPED (same structure-of-arrays layout
-            # as the subspace state, built once here) for the whole run:
-            # both jitted steps consume weight slices lazily and the outer
-            # merge is a pure batched W += V B^T on the stacked buffer —
-            # no per-leaf stack/unstack anywhere in the training loop.
-            # Ungroup only at the API boundary (self.model_params).
-            self.params, self.opt_state = subspace.init_grouped(
-                self.params, tcfg, okey)
-            mk = (steps_mod.make_train_step if tcfg.optimizer ==
-                  "lowrank_adam" else steps_mod.make_zo_train_step)
-            self._inner = jax.jit(mk(cfg, tcfg, loss_fn),
-                                  donate_argnums=donate)
-            self._outer = jax.jit(steps_mod.make_outer_step(cfg, tcfg),
-                                  donate_argnums=donate)
-        else:
-            raise ValueError(tcfg.optimizer)
+        self._inner = jax.jit(self.method.make_inner_step(cfg, tcfg,
+                                                          loss_fn),
+                              donate_argnums=donate)
+        outer = self.method.make_outer_step(cfg, tcfg)
+        self._outer = (jax.jit(outer, donate_argnums=donate)
+                       if outer is not None else None)
         self.step = 0
 
     @property
@@ -120,7 +112,8 @@ class Trainer:
         if not self.workdir:
             return None
         template = {"params": self.params, "opt": self.opt_state}
-        restored, manifest = ckpt.restore_latest(self.workdir, template)
+        restored, manifest = ckpt.restore_latest(
+            self.workdir, template, expect_method=self.method.checkpoint_tag)
         if restored is None:
             return None
         self.params = restored["params"]
@@ -133,7 +126,9 @@ class Trainer:
             return
         ckpt.save(self.workdir, self.step,
                   {"params": self.params, "opt": self.opt_state},
-                  keep=self.keep, extra={"arch": self.cfg.name})
+                  keep=self.keep,
+                  extra={"arch": self.cfg.name,
+                         "method": self.method.checkpoint_tag})
 
     # -- main loop ----------------------------------------------------------
 
