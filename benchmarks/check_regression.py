@@ -11,7 +11,13 @@ per-leaf reference layout; outer: the stack/unstack tree path) and the
 resulting ratio is compared against the baseline JSON's ratio.  A >25%
 ratio regression means the grouped layout's advantage itself eroded —
 exactly what the grouped-masters refactor is supposed to protect.
-Absolute times are printed for context but never gate.
+Absolute times are printed for context but never gate.  The ms-ratio gate
+is additionally per-dtype: it only fires when baseline and fresh ran the
+same ``compute_dtype`` (a dtype flip is a config change, not a
+regression).  Two further mixed-precision gates are baseline-free: every
+timed section must carry ``compute_dtype`` provenance, and the
+roofline-derived bf16 inner step must access >= 35% fewer HBM bytes than
+the fp32 one (both sides computed analytically in the same run).
 
 Usage:
     python benchmarks/check_regression.py \
@@ -30,6 +36,11 @@ GATED = {
     "grouped_inner_ms": "ungrouped_inner_ms",
     "grouped_outer_ms": "tree_outer_ms",
 }
+
+# the mixed-precision hot path must remove at least this fraction of the
+# grouped inner step's roofline-derived HBM traffic (host-independent:
+# both sides of the ratio are computed analytically in the SAME run)
+MIN_BF16_BYTES_REDUCTION = 0.35
 
 
 def _ratio(record: dict, key: str, ref_key: str):
@@ -64,10 +75,58 @@ def check_methods_registry(fresh: dict) -> list[str]:
     return failures
 
 
+def check_dtype_bytes(fresh: dict) -> list[str]:
+    """Mixed-precision gate: every timed section must carry compute-dtype
+    provenance, and the roofline-derived bf16 inner step must access at
+    least MIN_BF16_BYTES_REDUCTION fewer bytes than the fp32 baseline."""
+    failures = []
+    for section in ("train_step", "grouped_state"):
+        if fresh.get(section, {}).get("compute_dtype") is None:
+            failures.append(
+                f"{section}: no 'compute_dtype' provenance tag in fresh run")
+        else:
+            print(f"[ok] {section}: ran at compute_dtype="
+                  f"{fresh[section]['compute_dtype']!r}")
+    bb = fresh.get("train_step", {}).get("inner_bytes_by_dtype")
+    if not bb:
+        failures.append(
+            "train_step: inner_bytes_by_dtype missing from fresh run "
+            "(kernel_bench must record the bf16-vs-fp32 bytes-accessed "
+            "columns)"
+        )
+        return failures
+    red = bb.get("reduction") or 0.0
+    bf16_mib = bb.get("bfloat16", 0.0) / 2**20
+    f32_mib = bb.get("float32", 0.0) / 2**20
+    pct = red * 100.0
+    floor_pct = MIN_BF16_BYTES_REDUCTION * 100.0
+    status = "FAIL" if red < MIN_BF16_BYTES_REDUCTION else "ok"
+    print(
+        f"[{status}] inner step bytes: bf16 {bf16_mib:.1f} MiB vs f32 "
+        f"{f32_mib:.1f} MiB -> {pct:.1f}% reduction (floor "
+        f"{floor_pct:.0f}%)"
+    )
+    if status == "FAIL":
+        failures.append(
+            f"bf16 inner step removes only {pct:.1f}% of HBM bytes "
+            f"(< {floor_pct:.0f}% floor)"
+        )
+    return failures
+
+
 def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     failures = check_methods_registry(fresh)
+    failures += check_dtype_bytes(fresh)
     base_g = baseline.get("grouped_state", {})
     fresh_g = fresh.get("grouped_state", {})
+    # the ms-ratio gate only means something dtype-vs-same-dtype: a bf16
+    # run against an fp32 baseline is a config change, not a regression
+    base_dt = base_g.get("compute_dtype", "float32")
+    fresh_dt = fresh_g.get("compute_dtype", "float32")
+    if base_dt != fresh_dt:
+        print(f"[skip] grouped inner/outer ratio gates: baseline ran "
+              f"compute_dtype={base_dt!r}, fresh ran {fresh_dt!r}")
+        return failures
     for key, ref_key in GATED.items():
         base_ratio = _ratio(base_g, key, ref_key)
         fresh_ratio = _ratio(fresh_g, key, ref_key)

@@ -107,6 +107,10 @@ def bench_ops() -> list:
                 # jax.jit per call would retrace and time the compiler
                 jf = jax.jit(lambda fused=fused: fused(False))
                 fused_compiled_ms = 1e3 * _timeit(jf, iters=10)
+            ent_f32 = roofline.lowrank_kernel_entry(name, m, k, n, r,
+                                                    itemsize=4)
+            ent_bf16 = roofline.lowrank_kernel_entry(name, m, k, n, r,
+                                                     itemsize=2)
             row = {
                 "op": name, "shape": {"m": m, "k": k, "n": n, "r": r},
                 "backend": jax.default_backend(),
@@ -115,8 +119,16 @@ def bench_ops() -> list:
                 "fused_interpret_ms":
                     1e3 * _timeit(lambda: fused(True), iters=interp_iters),
                 "fused_compiled_ms": fused_compiled_ms,
-                "roofline": roofline.lowrank_kernel_entry(
-                    name, m, k, n, r, itemsize=4),
+                "roofline": ent_f32,
+                # bf16-vs-fp32 bytes accessed (roofline-derived, per-
+                # operand dtypes: dB / Adam state stay fp32 by contract)
+                "bytes_accessed": {
+                    "f32_fused": ent_f32["bytes_fused"],
+                    "bf16_fused": ent_bf16["bytes_fused"],
+                    "bf16_vs_f32_fused":
+                        ent_bf16["bytes_fused"] / ent_f32["bytes_fused"],
+                    "bf16_by_dtype": ent_bf16["bytes_by_dtype"]["fused"],
+                },
             }
             rows.append(row)
             print(f"{name} {m}x{k}x{n} r={r}: "
@@ -145,8 +157,20 @@ def bench_train_step() -> dict:
     method = methods.get(tcfg.optimizer)
     params, opt = method.init(lm.init_params(cfg, jax.random.key(0)), tcfg,
                               jax.random.key(1))
-    batch = lm_batch(0, 0, batch=4, seq_len=64, vocab=cfg.vocab_size)
+    batch_n, seq = 4, 64
+    batch = lm_batch(0, 0, batch=batch_n, seq_len=seq, vocab=cfg.vocab_size)
     step = jax.jit(method.make_inner_step(cfg, tcfg))
+
+    # Roofline-derived bytes of this grouped inner step under bf16 vs fp32
+    # compute (host-independent: pure traffic model over the real layout —
+    # the acceptance gate for the mixed-precision hot path lives on this)
+    lead = lambda s: int(np.prod(s[:-2])) if len(s) > 2 else 1
+    groups = [(spec.shape[-2], spec.shape[-1], spec.rank,
+               len(spec.leaf_idx) * lead(spec.shape))
+              for spec in opt.layout.groups]
+    tokens = batch_n * seq
+    bytes_f32 = roofline.lowrank_inner_step_bytes(groups, tokens, "f32")
+    bytes_bf16 = roofline.lowrank_inner_step_bytes(groups, tokens, "bf16")
 
     def run():
         p, o, metr = step(params, opt, batch)
@@ -166,13 +190,22 @@ def bench_train_step() -> dict:
             os.environ.pop("REPRO_KERNEL_DISPATCH", None)
         else:
             os.environ["REPRO_KERNEL_DISPATCH"] = prev
-    return {"arch": "llama-tiny", "batch": 4, "seq": 64,
+    return {"arch": "llama-tiny", "batch": batch_n, "seq": seq,
             "backend": jax.default_backend(),
             # provenance: which registered method produced these columns
             # (bench-smoke's methods-registry gate checks this)
             "method": method.name,
+            # provenance: the compute dtype the timed step actually ran at
+            "compute_dtype": opt.layout.compute_dtype,
             "inner_step_xla_ms": xla_ms,
-            "inner_step_dispatch_ms": routed_ms}
+            "inner_step_dispatch_ms": routed_ms,
+            "inner_bytes_by_dtype": {
+                "float32": bytes_f32["bytes"],
+                "bfloat16": bytes_bf16["bytes"],
+                "bf16_breakdown": bytes_bf16["by_dtype"],
+                # fraction of HBM traffic the bf16 hot path removes
+                "reduction": 1.0 - bytes_bf16["bytes"] / bytes_f32["bytes"],
+            }}
 
 
 def bench_grouped_state() -> dict:
@@ -269,6 +302,9 @@ def bench_grouped_state() -> dict:
         # provenance: every timing column here exercises this method's
         # machinery (bench-smoke's methods-registry gate)
         "method": method_name,
+        # provenance: the grouped inner/outer ratio gate only compares
+        # same-dtype runs (check_regression skips on a tag mismatch)
+        "compute_dtype": state.layout.compute_dtype,
         "n_groups": len(state.groups),
         "n_lowrank_leaves": sum(len(s.leaf_idx)
                                 for s in state.layout.groups),
@@ -296,8 +332,12 @@ def main(argv=None):
     # deserves the freshest process state (interpret-mode Pallas runs in
     # bench_ops leave the allocator in a different regime)
     from repro import methods
+    from repro.models.common import resolve_compute_dtype
     grouped_state = bench_grouped_state()
     rec = {"backend": jax.default_backend(), "fast": FAST,
+           # the compute dtype this host resolves to (REPRO_COMPUTE_DTYPE /
+           # auto); per-section tags record what each section actually ran
+           "compute_dtype": np.dtype(resolve_compute_dtype()).name,
            # the registry snapshot the per-section "method" tags must
            # resolve against (asserted by check_regression.py in CI)
            "methods_available": list(methods.available()),

@@ -42,7 +42,20 @@ tcfg = TrainConfig(
     c=1.0,                      # strong unbiasedness
     lazy_k=20,                  # K inner steps per projection resample
     lr=3e-3, warmup_steps=10, total_steps=100,
-    min_dim_for_lowrank=64, weight_decay=0.0, seed=0)
+    min_dim_for_lowrank=64, weight_decay=0.0, seed=0,
+    # --- mixed precision: the hot-path compute dtype ---------------------
+    # "auto" (the default) = bf16 on TPU/GPU, fp32 on CPU.  Set
+    # compute_dtype="bfloat16" (or REPRO_COMPUTE_DTYPE=bfloat16) to force
+    # the bf16 hot path anywhere: the packed W/B/V slices and the stored
+    # projections are read/written at half width (the roofline win — every
+    # hot-path op is memory-bound), while B masters, Adam moments and the
+    # master weights stay fp32 and every kernel accumulates in fp32.
+    compute_dtype="auto")
+
+from repro.models.common import resolve_compute_dtype  # noqa: E402
+import numpy as np  # noqa: E402
+print(f"compute dtype: {np.dtype(resolve_compute_dtype(tcfg)).name} "
+      f"(masters/moments stay fp32)")
 
 # --- what the optimizer stores (paper Table 2's mechanism) -----------------
 params = lm.init_params(cfg, jax.random.key(0))

@@ -163,76 +163,166 @@ def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def _mm_bytes(m: int, k: int, n: int, s: int, tile: int = 128,
-              out_s: Optional[int] = None) -> float:
-    """HBM traffic of one tiled (m,k) @ (k,n) matmul: each operand is
-    re-streamed once per tile-row/column of the other output dim."""
-    return (s * (m * k * _cdiv(n, tile) + k * n * _cdiv(m, tile))
-            + (out_s if out_s is not None else s) * m * n)
+_ITEMSIZE_NAME = {8: "f64", 4: "f32", 2: "bf16", 1: "f8e4m3fn"}
 
 
-def lowrank_kernel_entry(op: str, m: int, k: int, n: int, r: int,
-                         itemsize: int = 2) -> dict:
-    """FLOPs / HBM bytes / arithmetic intensity for one low-rank op.
+def _operand_terms(op: str, m: int, k: int, n: int, r: int):
+    """Per-operand HBM traffic (element counts) of one low-rank op.
 
-    Both columns use grid-revisit-aware traffic accounting (a 128-tiled
-    kernel re-fetches W once per output row-strip, x once per column-strip
-    — operands are NOT streamed just once): ``bytes_fused`` models the
-    Pallas kernels' actual BlockSpecs, ``bytes_unfused`` models autodiff's
-    default schedule as a sequence of independent tiled matmuls with HBM
-    round-trips for every intermediate.  The interesting entry is
-    ``lowrank_backward``: unfused, dy (m x n) is streamed by three separate
-    contractions (dy W^T, dy B, dy^T p) and q = dy B round-trips; fused, dy
-    tiles are read once.  Intensity compared against the v5e machine
-    balance PEAK_FLOPS / HBM_BW ≈ 240 FLOP/byte decides memory- vs
-    compute-bound.
+    Returns ``(flops, fused_terms, unfused_terms)`` with each term list a
+    ``[(operand, elements)]`` sequence.  ``fused`` models the Pallas
+    kernels' actual BlockSpecs with grid-revisit-aware accounting (a
+    128-tiled kernel re-fetches W once per output row-strip, x once per
+    column-strip — operands are NOT streamed just once); ``unfused``
+    models autodiff's default schedule as independent tiled matmuls with
+    HBM round-trips for every intermediate.
     """
-    s = itemsize
     ni, nj = _cdiv(m, 128), _cdiv(n, 128)
+    t = 128
     if op == "lowrank_forward":
         flops = 2 * m * k * n + 2 * m * k * r + 2 * m * r * n
         # kernel BlockSpecs: x per j-slab, w per i-strip, v per (i, j) slab
         # (its DMA is driven by the index map even though the j > 0 compute
         # is skipped), b per i-strip; y and p written once.
-        fused = s * (m * k * nj + k * n * ni + k * r * ni * nj + n * r * ni
-                     + m * n + m * r)
+        fused = [("x", m * k * nj), ("w", k * n * ni),
+                 ("v", k * r * ni * nj), ("b", n * r * ni),
+                 ("y", m * n), ("p", m * r)]
         # unfused: three tiled matmuls (x W, x V, p B^T) + the y0+y1 add.
-        unfused = (_mm_bytes(m, k, n, s) + _mm_bytes(m, k, r, s)
-                   + _mm_bytes(m, r, n, s) + 3 * s * m * n)
+        unfused = [("x", m * k * (_cdiv(n, t) + _cdiv(r, t))),
+                   ("w", k * n * _cdiv(m, t)), ("v", k * r * _cdiv(m, t)),
+                   ("b", n * r * _cdiv(m, t)),
+                   ("p", m * r * (1 + _cdiv(n, t))), ("y", 5 * m * n)]
     elif op == "lowrank_backward":
         flops = 2 * m * n * k + 2 * m * n * r + 2 * m * r * k + 2 * m * n * r
         # fused grid (i, j), full-K strips: dy once; w column-strip per i;
         # v resident; b per (i, j); p per i-strip; dx written once; dB
         # resident in VMEM, written once in fp32.
-        fused = s * (m * n + k * n * ni + k * r + n * r * ni + m * r
-                     + m * k) + 4 * n * r
+        fused = [("dy", m * n), ("w", k * n * ni), ("v", k * r),
+                 ("b", n * r * ni), ("p", m * r), ("dx", m * k),
+                 ("db", n * r)]
         # unfused: dy W^T, q = dy B (round-trips), q V^T, dx partial add,
         # dy^T p (dy streamed a third time), dB in fp32.
-        unfused = (_mm_bytes(m, n, k, s) + _mm_bytes(m, n, r, s)
-                   + _mm_bytes(m, r, k, s) + 3 * s * m * k
-                   + _mm_bytes(n, m, r, s, out_s=4))
+        unfused = [("dy", m * n * (_cdiv(k, t) + 2 * _cdiv(r, t))),
+                   ("w", k * n * _cdiv(m, t)), ("v", k * r * _cdiv(m, t)),
+                   ("b", n * r * _cdiv(m, t)),
+                   ("q", m * r * (1 + _cdiv(k, t))),
+                   ("p", m * r * _cdiv(n, t)), ("dx", 5 * m * k),
+                   ("db", n * r)]
     elif op == "lowrank_merge":
         flops = 2 * k * n * r
         nik = _cdiv(k, 256)
-        fused = s * (2 * k * n + k * r + n * r * nik)
+        fused = [("w", 2 * k * n), ("v", k * r), ("b", n * r * nik)]
         # unfused: delta = V B^T materialised in fp32, then w + delta.
-        unfused = _mm_bytes(k, r, n, s, tile=256, out_s=4) \
-            + s * 2 * k * n + 4 * k * n
+        unfused = [("v", k * r * _cdiv(n, 256)),
+                   ("b", n * r * _cdiv(k, 256)),
+                   ("delta", 2 * k * n), ("w", 2 * k * n)]
     elif op == "subspace_adam":
         flops = 10 * n * r
-        fused = 4 * (4 + 3) * n * r          # one round-trip of 4-in/3-out
-        unfused = 4 * (10 + 6) * n * r       # ~10 elementwise HBM passes
+        # one round-trip of 4-in/3-out (b/m/v read+write, g read once)
+        fused = [("state", 6 * n * r), ("g", n * r)]
+        # ~10 elementwise HBM passes with intermediates round-tripping
+        unfused = [("state", 14 * n * r), ("g", 2 * n * r)]
     else:
         raise ValueError(op)
+    return flops, fused, unfused
+
+
+def _operand_dtypes(op: str, stream: str) -> dict:
+    """Default dtype per operand: streamed tensors ride the compute dtype;
+    dB, the merge's materialised delta and the Adam state are fp32 by the
+    kernel contract (masters/moments/accumulators never downcast).  The
+    Adam *gradient* is fp32 too: it IS dB — the backward writes it fp32
+    and autodiff casts the packed-B cotangent back up to the fp32 master,
+    so no bf16 g-stream ever exists in the hot path."""
+    f32_always = {"db", "delta", "state", "g"}
+    names = {
+        "lowrank_forward": ("x", "w", "v", "b", "y", "p"),
+        "lowrank_backward": ("dy", "w", "v", "b", "p", "q", "dx", "db"),
+        "lowrank_merge": ("w", "v", "b", "delta"),
+        "subspace_adam": ("state", "g"),
+    }[op]
+    return {o: ("f32" if o in f32_always else stream) for o in names}
+
+
+def lowrank_kernel_entry(op: str, m: int, k: int, n: int, r: int,
+                         itemsize: int = 2,
+                         dtypes: Optional[Dict[str, str]] = None) -> dict:
+    """FLOPs / HBM bytes / arithmetic intensity for one low-rank op.
+
+    Bytes are computed from PER-OPERAND dtypes: ``dtypes`` overrides the
+    defaults (keys per op, see :func:`_operand_dtypes`; values are HLO
+    dtype names like ``"bf16"``/``"f32"``), and ``itemsize`` sets the
+    default streaming dtype when no override is given — so a bf16 entry
+    halves exactly the operands the mixed-precision hot path halves while
+    dB / the Adam state stay 4-byte.  ``bytes_by_dtype`` breaks the totals
+    down per dtype.  The interesting entry is ``lowrank_backward``:
+    unfused, dy (m x n) is streamed by three separate contractions
+    (dy W^T, dy B, dy^T p) and q = dy B round-trips; fused, dy tiles are
+    read once.  Intensity compared against the v5e machine balance
+    PEAK_FLOPS / HBM_BW ≈ 240 FLOP/byte decides memory- vs compute-bound.
+    """
+    stream = _ITEMSIZE_NAME.get(itemsize, "f32")
+    dt = _operand_dtypes(op, stream)
+    if dtypes:
+        dt.update(dtypes)
+    flops, fused_terms, unfused_terms = _operand_terms(op, m, k, n, r)
+
+    def _bytes(terms):
+        total, by_dt = 0.0, {}
+        for operand, elems in terms:
+            size = _DTYPE_BYTES.get(dt[operand], itemsize)
+            b = float(elems) * size
+            total += b
+            by_dt[dt[operand]] = by_dt.get(dt[operand], 0.0) + b
+        return total, by_dt
+
+    fused, fused_by = _bytes(fused_terms)
+    unfused, unfused_by = _bytes(unfused_terms)
     return {
         "op": op, "m": m, "k": k, "n": n, "r": r,
         "flops": float(flops),
         "bytes_fused": float(fused), "bytes_unfused": float(unfused),
+        "bytes_by_dtype": {"fused": fused_by, "unfused": unfused_by},
+        "dtypes": dt,
         "ai_fused": flops / fused, "ai_unfused": flops / unfused,
         "machine_balance": PEAK_FLOPS / HBM_BW,
         "bound_fused": "compute" if flops / fused > PEAK_FLOPS / HBM_BW
                        else "memory",
     }
+
+
+def lowrank_inner_step_bytes(groups, tokens: int,
+                             compute_dtype: str = "bf16") -> dict:
+    """Roofline-derived HBM bytes of ONE grouped inner training step.
+
+    ``groups``: iterable of ``(k, n, r, members)`` — one entry per
+    low-rank group (``members`` = stacked leaves); ``tokens``: flattened
+    batch*seq token count feeding each matmul.  Sums the fused forward +
+    fused backward per member plus the group's batched subspace-Adam, with
+    streamed operands in ``compute_dtype`` and dB / Adam state fp32 (the
+    kernel contract).  Host-independent by construction — this is the
+    quantity the bench's bf16-vs-fp32 bytes gate compares.
+    """
+    total, by_dt = 0.0, {}
+    for (k, n, r, members) in groups:
+        for op, rows in (("lowrank_forward", None),
+                         ("lowrank_backward", None),
+                         ("subspace_adam", members * n)):
+            if op == "subspace_adam":
+                e = lowrank_kernel_entry(op, 0, 0, rows, r,
+                                         dtypes=_operand_dtypes(
+                                             op, compute_dtype))
+                mult = 1
+            else:
+                e = lowrank_kernel_entry(op, tokens, k, n, r,
+                                         dtypes=_operand_dtypes(
+                                             op, compute_dtype))
+                mult = members
+            total += mult * e["bytes_fused"]
+            for name, b in e["bytes_by_dtype"]["fused"].items():
+                by_dt[name] = by_dt.get(name, 0.0) + mult * b
+    return {"bytes": total, "by_dtype": by_dt,
+            "compute_dtype": compute_dtype, "tokens": tokens}
 
 
 def roofline_terms(record: dict, cfg=None, shape=None) -> dict:

@@ -180,4 +180,7 @@ class TrainConfig:
     zo_sigma: float = 1e-3            # LR/ZO perturbation scale
     reset_moments: bool = True        # reset Adam moments at resample
     min_dim_for_lowrank: int = 128    # matrices with n below this stay dense
+    compute_dtype: str = "auto"       # hot-path compute: 'auto' (bf16 on
+                                      # TPU/GPU, fp32 on CPU) | 'bfloat16' |
+                                      # 'float32'; masters/moments stay fp32
     seed: int = 0

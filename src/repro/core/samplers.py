@@ -43,8 +43,14 @@ def gaussian(key: Array, n: int, r: int, c: float = 1.0,
     E[V V^T] = (c/r) * r * I = c I, so it is admissible -- but
     tr(E[P^2]) = c^2 n (n + r + 1) / r > c^2 n^2 / r: strictly suboptimal
     (Remark 1).
+
+    Drawn in fp32 and cast ONCE to ``dtype`` (like every sampler here):
+    a reduced-precision V is the fp32 draw plus rounding, so the same key
+    yields the same projection up to representation error and the
+    estimator mean stays c I to rounding accuracy.
     """
-    return jnp.sqrt(c / r) * jax.random.normal(key, (n, r), dtype=dtype)
+    v = jnp.sqrt(c / r) * jax.random.normal(key, (n, r), dtype=jnp.float32)
+    return v.astype(dtype)
 
 
 def stiefel(key: Array, n: int, r: int, c: float = 1.0,
@@ -227,9 +233,11 @@ def dependent_diagonal(key: Array, diag_energy: Array, r: int, c: float = 1.0,
 
 def gaussian_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,
                      dtype: jnp.dtype = jnp.float32) -> Array:
-    """(batch, n, r) of independent Gaussian projections in one draw."""
-    return jnp.sqrt(c / r) * jax.random.normal(key, (batch, n, r),
-                                               dtype=dtype)
+    """(batch, n, r) of independent Gaussian projections in one draw
+    (fp32 draw, one cast — see :func:`gaussian`)."""
+    v = jnp.sqrt(c / r) * jax.random.normal(key, (batch, n, r),
+                                            dtype=jnp.float32)
+    return v.astype(dtype)
 
 
 def stiefel_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,

@@ -1,0 +1,21 @@
+"""Shared mixed-precision helper for the Pallas kernel bodies and the
+dispatch-layer XLA impls.
+
+The casting contract (see :mod:`repro.kernels.ref`) allows operands of one
+contraction to arrive in different dtypes — bf16 compute slices against
+fp32 masters.  ``jax.lax.dot`` requires matching operand dtypes, so every
+kernel routes its dots through :func:`dotf`: promote the narrower operand
+in VMEM (one tile, not an HBM round-trip), accumulate in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dotf(a: jax.Array, b: jax.Array) -> jax.Array:
+    """fp32-accumulating dot tolerant of mixed operand dtypes."""
+    if a.dtype != b.dtype:
+        dt = jnp.promote_types(a.dtype, b.dtype)
+        a, b = a.astype(dt), b.astype(dt)
+    return jax.lax.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,4 +1,5 @@
-"""Shape-aware kernel dispatch: every low-rank op routed to its best impl.
+"""Shape- and dtype-aware kernel dispatch: every low-rank op routed to its
+best impl.
 
 The training hot path (models/linear.py, optim/subspace.py) calls the
 functions in this module instead of choosing between raw Pallas kernels and
@@ -10,25 +11,52 @@ jnp expressions itself.  Per call the dispatcher picks a route:
     ``assert K % bk == 0`` never bites callers.  On non-TPU backends the
     kernels run in interpret mode (see kernels/ops.py / the
     REPRO_PALLAS_INTERPRET knob).
-  * ``xla`` — the pure-jnp reference path (kernels/ref.py expressions),
-    which XLA fuses well on CPU/GPU and which serves as the fallback when a
-    Pallas kernel's VMEM working set would blow the ~16 MB budget.
+  * ``xla`` — the pure-jnp reference path (kernels/ref.py-style expressions
+    with fp32 accumulation), which XLA fuses well on CPU/GPU and which
+    serves as the fallback when a Pallas kernel's VMEM working set would
+    blow the ~16 MB budget.
 
 Route selection: ``REPRO_KERNEL_DISPATCH`` ∈ {pallas, xla, auto} overrides;
 ``auto`` (default) = Pallas on TPU when the shape guard passes, XLA
-otherwise.  ``TABLE`` maps op -> {route -> impl} and is deliberately a
-plain dict so tests can monkeypatch impls to assert the hot path really
-flows through here.
+otherwise.  The VMEM guard uses each operand's REAL itemsize — a bf16
+workload has half the working set of the same-shape fp32 one and must not
+be spuriously routed to the XLA fallback.  ``TABLE`` maps
+op -> {route -> impl} and is deliberately a plain dict so tests can
+monkeypatch impls to assert the hot path really flows through here.
+
+Mixed-precision contract (mirrored by kernels/ref.py):
+
+  * forward:  y and p carry x.dtype; the y/p accumulators are fp32.
+  * backward: dx carries dy.dtype, dB is fp32 (Adam consumes it in fp32).
+  * merge:    W' carries w.dtype; the V B^T accumulate is fp32 even when
+    V is bf16 and B is the fp32 master.
+  * subspace_adam: b/m/v are fp32 masters/moments in AND out; only the
+    gradient may arrive in a reduced dtype (cast up once, in VMEM).
+
+Kernel cache: every Pallas launch is built once per
+``(op, padded shape, dtypes, blocks, statics)`` key and memoised in
+``_KERNEL_CACHE`` — ragged shapes that pad to the same tile grid share one
+compiled kernel instead of re-tracing per call site
+(``kernel_cache_info()`` exposes hit/miss counts for the retrace tests).
+
+Rank packing: ``r ≪ 128`` leaves the MXU/VPU lanes mostly idle (the minor
+dim is padded to a full 128-lane tile on real TPUs).  For the elementwise
+``subspace_adam`` the dispatcher therefore *packs* the flattened
+``(rows, r)`` state into a lane-aligned ``(rows/s, s·r_pad)`` multi-slot
+buffer (``s·r_pad == 128``): one full-lane kernel launch per group instead
+of an r-lane-starved one.  The static plan (:class:`PackSpec`) is computed
+once at ``subspace.init`` and carried in ``SubspaceLayout.packs``.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
+from ._mixed import dotf as _dot32
 from .lowrank_backward import lowrank_backward as _pl_backward
 from .lowrank_forward import lowrank_forward as _pl_forward
 from .lowrank_update import lowrank_merge as _pl_merge
@@ -66,26 +94,51 @@ def _blocks(M: int, N: int, K: Optional[int] = None):
 
 
 # ---------------------------------------------------------------------------
-# Route selection
+# Route selection (dtype-aware VMEM estimates)
 # ---------------------------------------------------------------------------
 
-def _bwd_vmem_bytes(M: int, K: int, N: int, r: int, itemsize: int) -> int:
-    """Working set of the fused backward (see lowrank_backward.py)."""
+def _sizes(dtypes: Sequence, n: int, itemsize: int) -> Tuple[int, ...]:
+    """Per-operand itemsizes from real dtypes; ``itemsize`` fallback."""
+    if dtypes:
+        out = tuple(jnp.dtype(d).itemsize for d in dtypes)
+        if len(out) == n:
+            return out
+    return (itemsize,) * n
+
+
+def _bwd_vmem_bytes(M: int, K: int, N: int, r: int, sizes) -> int:
+    """Working set of the fused backward (see lowrank_backward.py).
+
+    Per-operand itemsizes: (dy, w, v, b, p) — dx rides dy's dtype, the dx
+    accumulator and the whole dB stay fp32 in VMEM.
+    """
+    sdy, sw, sv, sb, sp = sizes
     bm, Mp, bn, Np, _, Kp = _blocks(M, N, K)
-    return (Kp * (bn + r) * itemsize          # w column strip + v
-            + 4 * (bm * Kp + Np * r)          # dx f32 accumulator + whole dB
-            + bm * Kp * itemsize              # dx output block (dy.dtype)
-            + bm * (bn + r) * itemsize)       # dy tile + p strip
+    return (Kp * bn * sw + Kp * r * sv      # w column strip + v
+            + 4 * (bm * Kp + Np * r)        # dx f32 accumulator + whole dB
+            + bm * Kp * sdy                 # dx output block (dy.dtype)
+            + bm * bn * sdy + bn * r * sb + bm * r * sp)  # dy/b/p tiles
 
 
-def _fwd_vmem_bytes(M: int, K: int, N: int, r: int, itemsize: int) -> int:
+def _fwd_vmem_bytes(M: int, K: int, N: int, r: int, sizes) -> int:
+    """Per-operand itemsizes: (x, w, v, b) — y/p accumulators are fp32."""
+    sx, sw, sv, sb = sizes
     bm, _, bn, _, bk, _ = _blocks(M, N, K)
-    return (bm * bk + bk * bn + bk * r + bn * r) * itemsize \
-        + 4 * (bm * bn + bm * r)
+    return (bm * bk * sx + bk * bn * sw + bk * r * sv + bn * r * sb
+            + bm * bn * sx                  # y output tile (x.dtype)
+            + 4 * (bm * bn + bm * r))       # f32 acc + accp scratch
 
 
-def route(op: str, *, shapes: Tuple[int, ...] = (), itemsize: int = 4) -> str:
-    """Pick 'pallas' or 'xla' for ``op`` given (M, K, N, r)-style shapes."""
+def route(op: str, *, shapes: Tuple[int, ...] = (),
+          dtypes: Sequence = (), itemsize: int = 4) -> str:
+    """Pick 'pallas' or 'xla' for ``op`` given (M, K, N, r)-style shapes.
+
+    ``dtypes``: the op's operand dtypes in call order — the VMEM guard
+    sizes each operand with its real itemsize (a bf16 working set is half
+    the fp32 one; without this, bf16 workloads were spuriously routed to
+    the XLA fallback).  ``itemsize`` is the uniform fallback when the
+    caller has no dtypes at hand.
+    """
     env = os.environ.get("REPRO_KERNEL_DISPATCH", "auto")
     if env in ("pallas", "xla"):
         return env
@@ -96,17 +149,115 @@ def route(op: str, *, shapes: Tuple[int, ...] = (), itemsize: int = 4) -> str:
         return "xla"        # interpret-mode Pallas is a debug tool, not a path
     if op == "lowrank_forward" and shapes:
         m, k, n, r = shapes
-        if r > 512 or _fwd_vmem_bytes(m, k, n, r, itemsize) > VMEM_BUDGET:
+        sz = _sizes(dtypes, 4, itemsize)
+        if r > 512 or _fwd_vmem_bytes(m, k, n, r, sz) > VMEM_BUDGET:
             return "xla"
     if op == "lowrank_backward" and shapes:
         m, k, n, r = shapes
-        if _bwd_vmem_bytes(m, k, n, r, itemsize) > VMEM_BUDGET:
+        sz = _sizes(dtypes, 5, itemsize)
+        if _bwd_vmem_bytes(m, k, n, r, sz) > VMEM_BUDGET:
             return "xla"
     return "pallas"
 
 
 # ---------------------------------------------------------------------------
-# Pallas impls (pad-to-tile wrappers over the raw kernels)
+# Kernel cache: one build/compile per (op, padded shape, dtypes, statics)
+# ---------------------------------------------------------------------------
+
+_KERNEL_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _cached_kernel(op: str, key: tuple, build):
+    """Memoised jitted Pallas wrapper for one padded-shape/dtype key.
+
+    ``build()`` returns the array->array callable (block sizes and other
+    statics already bound); it runs ONCE per key — every later call with
+    the same padded shapes and dtypes reuses the jitted instance, so a
+    3-outer-cycle run with ragged groups compiles each kernel exactly once
+    per ``(op, padded shape, dtypes)`` (asserted in
+    tests/test_mixed_precision.py).
+    """
+    full = (op,) + key
+    fn = _KERNEL_CACHE.get(full)
+    if fn is None:
+        _CACHE_STATS["misses"] += 1
+        fn = jax.jit(build())
+        _KERNEL_CACHE[full] = fn
+    else:
+        _CACHE_STATS["hits"] += 1
+    return fn
+
+
+def kernel_cache_info() -> dict:
+    return {**_CACHE_STATS, "size": len(_KERNEL_CACHE),
+            "keys": tuple(_KERNEL_CACHE)}
+
+
+def clear_kernel_cache() -> None:
+    _KERNEL_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+def _dt_names(*arrs) -> tuple:
+    return tuple(jnp.dtype(a.dtype).name for a in arrs)
+
+
+# ---------------------------------------------------------------------------
+# Rank packing (lane-aligned multi-slot layout for small-r elementwise ops)
+# ---------------------------------------------------------------------------
+
+class PackSpec(NamedTuple):
+    """Static plan packing a flattened ``(rows, r)`` state buffer into a
+    lane-aligned ``(rows_pad / slots, slots * r_pad)`` multi-slot buffer.
+
+    ``r_pad``: r zero-padded up to the next power-of-two divisor of 128;
+    ``slots``: how many consecutive rows share one 128-wide lane tile
+    (``slots * r_pad == 128``); ``rows_pad``: rows rounded up to a slots
+    multiple.  ``slots == 1 and r_pad == r`` means packing is a no-op
+    (r already lane-sized).  Elementwise semantics are unchanged — the
+    zero padding updates to zero under Adam and is sliced away.
+    """
+    rows: int
+    r: int
+    r_pad: int
+    slots: int
+    rows_pad: int
+
+    @property
+    def is_noop(self) -> bool:
+        return self.slots == 1 and self.r_pad == self.r \
+            and self.rows_pad == self.rows
+
+
+def rank_pack_plan(rows: int, r: int) -> PackSpec:
+    """The lane-packing plan for a flattened (rows, r) elementwise buffer."""
+    if r >= LANE or rows <= 0 or r <= 0:
+        return PackSpec(rows, r, r, 1, rows)
+    r_pad = 1
+    while r_pad < r:
+        r_pad *= 2
+    slots = max(1, LANE // r_pad)
+    return PackSpec(rows, r, r_pad, slots, _round_up(rows, slots))
+
+
+def _rank_pack(a: Array, plan: PackSpec) -> Array:
+    if plan.is_noop:
+        return a
+    a = jnp.pad(a, ((0, plan.rows_pad - plan.rows),
+                    (0, plan.r_pad - plan.r)))
+    return a.reshape(plan.rows_pad // plan.slots, plan.slots * plan.r_pad)
+
+
+def _rank_unpack(a: Array, plan: PackSpec) -> Array:
+    if plan.is_noop:
+        return a
+    a = a.reshape(plan.rows_pad, plan.r_pad)
+    return a[:plan.rows, :plan.r]
+
+
+# ---------------------------------------------------------------------------
+# Pallas impls (pad-to-tile wrappers over the raw, cached kernels)
 # ---------------------------------------------------------------------------
 
 def _pallas_forward(x2: Array, w: Array, v: Array, b: Array,
@@ -114,10 +265,16 @@ def _pallas_forward(x2: Array, w: Array, v: Array, b: Array,
     M, K = x2.shape
     N, r = w.shape[1], v.shape[1]
     bm, Mp, bn, Np, bk, Kp = _blocks(M, N, K)
-    out = _pl_forward(
-        _pad2(x2, Mp, Kp), _pad2(w, Kp, Np), _pad2(v, Kp, r),
-        _pad2(b, Np, r), bm=bm, bn=bn, bk=bk, interpret=_interpret(),
-        return_p=return_p)
+    itp = _interpret()
+    fn = _cached_kernel(
+        "lowrank_forward",
+        ((Mp, Kp, Np, r), _dt_names(x2, w, v, b), (bm, bn, bk),
+         return_p, itp),
+        lambda: (lambda xp, wp, vp, bp: _pl_forward(
+            xp, wp, vp, bp, bm=bm, bn=bn, bk=bk, interpret=itp,
+            return_p=return_p)))
+    out = fn(_pad2(x2, Mp, Kp), _pad2(w, Kp, Np), _pad2(v, Kp, r),
+             _pad2(b, Np, r))
     if not return_p:
         return out[:M, :N]
     y, p = out
@@ -128,10 +285,14 @@ def _pallas_backward(dy2: Array, w: Array, v: Array, b: Array, p2: Array):
     M, N = dy2.shape
     K, r = w.shape[0], v.shape[1]
     bm, Mp, bn, Np, _, Kp = _blocks(M, N, K)
-    dx, db = _pl_backward(
-        _pad2(dy2, Mp, Np), _pad2(w, Kp, Np), _pad2(v, Kp, r),
-        _pad2(b, Np, r), _pad2(p2, Mp, r), bm=bm, bn=bn,
-        interpret=_interpret())
+    itp = _interpret()
+    fn = _cached_kernel(
+        "lowrank_backward",
+        ((Mp, Kp, Np, r), _dt_names(dy2, w, v, b, p2), (bm, bn), itp),
+        lambda: (lambda dyp, wp, vp, bp, pp: _pl_backward(
+            dyp, wp, vp, bp, pp, bm=bm, bn=bn, interpret=itp)))
+    dx, db = fn(_pad2(dy2, Mp, Np), _pad2(w, Kp, Np), _pad2(v, Kp, r),
+                _pad2(b, Np, r), _pad2(p2, Mp, r))
     return dx[:M, :K], db[:N]
 
 
@@ -141,8 +302,13 @@ def _pallas_merge(w: Array, v: Array, b: Array) -> Array:
     bk = min(256, _round_up(K, SUBLANE))
     bn = min(256, _round_up(N, LANE))
     Kp, Np = _round_up(K, bk), _round_up(N, bn)
-    out = _pl_merge(_pad2(w, Kp, Np), _pad2(v, Kp, r), _pad2(b, Np, r),
-                    bk=bk, bn=bn, interpret=_interpret())
+    itp = _interpret()
+    fn = _cached_kernel(
+        "lowrank_merge",
+        ((Kp, Np, r), _dt_names(w, v, b), (bk, bn), itp),
+        lambda: (lambda wp, vp, bp: _pl_merge(
+            wp, vp, bp, bk=bk, bn=bn, interpret=itp)))
+    out = fn(_pad2(w, Kp, Np), _pad2(v, Kp, r), _pad2(b, Np, r))
     return out[:K, :N]
 
 
@@ -152,8 +318,13 @@ def _pallas_project(g: Array, v: Array) -> Array:
     bk = min(256, _round_up(K, SUBLANE))
     bn = min(256, _round_up(N, LANE))
     Kp, Np = _round_up(K, bk), _round_up(N, bn)
-    out = _pl_project(_pad2(g, Kp, Np), _pad2(v, Kp, r), bn=bn, bk=bk,
-                      interpret=_interpret())
+    itp = _interpret()
+    fn = _cached_kernel(
+        "lowrank_project",
+        ((Kp, Np, r), _dt_names(g, v), (bk, bn), itp),
+        lambda: (lambda gp, vp: _pl_project(
+            gp, vp, bn=bn, bk=bk, interpret=itp)))
+    out = fn(_pad2(g, Kp, Np), _pad2(v, Kp, r))
     return out[:N]
 
 
@@ -161,24 +332,35 @@ def _pallas_adam(b2, g2, m2, v2, *, lr, step, beta1, beta2, eps, wd):
     rows, r = b2.shape
     blk = min(256, _round_up(rows, SUBLANE))
     rp = _round_up(rows, blk)
+    itp = _interpret()
+    fn = _cached_kernel(
+        "subspace_adam",
+        ((rp, r), _dt_names(b2, g2, m2, v2), blk,
+         (beta1, beta2, eps, wd), itp),
+        lambda: (lambda bp, gp, mp, vp, lr_, step_: _pl_adam(
+            bp, gp, mp, vp, lr=lr_, step=step_, beta1=beta1, beta2=beta2,
+            eps=eps, wd=wd, block=blk, interpret=itp)))
     padded = [_pad2(a, rp, r) for a in (b2, g2, m2, v2)]
-    outs = _pl_adam(*padded, lr=lr, step=step, beta1=beta1, beta2=beta2,
-                    eps=eps, wd=wd, block=blk, interpret=_interpret())
+    outs = fn(*padded, lr, step)
     return tuple(o[:rows] for o in outs)
 
 
 # ---------------------------------------------------------------------------
-# XLA impls (the unfused reference schedule)
+# XLA impls (the unfused reference schedule, fp32 accumulation)
 # ---------------------------------------------------------------------------
 
 def _xla_forward(x2: Array, w: Array, v: Array, b: Array, return_p: bool):
-    p = x2 @ v
-    y = x2 @ w + p @ b.T
+    p = _dot32(x2, v).astype(x2.dtype)
+    y = (_dot32(x2, w)
+         + _dot32(p.astype(jnp.float32), b.T.astype(jnp.float32))
+         ).astype(x2.dtype)
     return (y, p) if return_p else y
 
 
 def _xla_backward(dy2: Array, w: Array, v: Array, b: Array, p2: Array):
-    dx = dy2 @ w.T + (dy2 @ b) @ v.T
+    q = _dot32(dy2, b)
+    dx = (_dot32(dy2, w.T)
+          + _dot32(q, v.T.astype(jnp.float32))).astype(dy2.dtype)
     db = jax.lax.dot_general(dy2, p2.astype(dy2.dtype), (((0,), (0,)),
                                                          ((), ())),
                              preferred_element_type=jnp.float32)
@@ -209,7 +391,9 @@ def lowrank_forward(x: Array, w: Array, v: Array, b: Array, *,
     """y = x W + (x V) B^T over arbitrary leading dims of x.
 
     ``return_p=True`` also returns p = x V (x.dtype — the only saved
-    activation) for the backward residual.
+    activation) for the backward residual.  Operands may be mixed-dtype
+    (bf16 compute slices over fp32 masters); accumulation is fp32 and the
+    outputs carry x.dtype.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
@@ -217,7 +401,7 @@ def lowrank_forward(x: Array, w: Array, v: Array, b: Array, *,
     x2 = x.reshape(-1, K)
     impl = TABLE["lowrank_forward"][route(
         "lowrank_forward", shapes=(x2.shape[0], K, N, r),
-        itemsize=x.dtype.itemsize)]
+        dtypes=(x.dtype, w.dtype, v.dtype, b.dtype))]
     out = impl(x2, w, v, b, return_p)
     if not return_p:
         return out.reshape(lead + (N,))
@@ -228,8 +412,8 @@ def lowrank_forward(x: Array, w: Array, v: Array, b: Array, *,
 def lowrank_backward(dy: Array, w: Array, v: Array, b: Array, p: Array):
     """(dx, db) for y = x W + (x V) B^T, from dy and the residual p = x V.
 
-    dx has dy's leading dims + (K,); db is (N, r) fp32 with every leading
-    (batch/seq) axis contracted.
+    dx has dy's leading dims + (K,) in dy.dtype; db is (N, r) fp32 with
+    every leading (batch/seq) axis contracted.
     """
     N = dy.shape[-1]
     K, r = w.shape[0], v.shape[1]
@@ -238,14 +422,20 @@ def lowrank_backward(dy: Array, w: Array, v: Array, b: Array, p: Array):
     p2 = p.reshape(-1, r)
     impl = TABLE["lowrank_backward"][route(
         "lowrank_backward", shapes=(dy2.shape[0], K, N, r),
-        itemsize=dy.dtype.itemsize)]
+        dtypes=(dy.dtype, w.dtype, v.dtype, b.dtype, p.dtype))]
     dx, db = impl(dy2, w, v, b, p2)
     return dx.reshape(lead + (K,)), db
 
 
 def lowrank_merge(w: Array, v: Array, b: Array) -> Array:
-    """W + V B^T in fp32, any leading (expert/layer) dims, W.dtype out."""
-    impl = TABLE["lowrank_merge"][route("lowrank_merge")]
+    """W + V B^T in fp32, any leading (expert/layer) dims, W.dtype out.
+
+    V may be a reduced-precision draw and B the fp32 master — the delta
+    accumulates in fp32 either way, so the stored weight never sees a
+    double rounding.
+    """
+    impl = TABLE["lowrank_merge"][route(
+        "lowrank_merge", dtypes=(w.dtype, v.dtype, b.dtype))]
     fn = impl
     for _ in range(w.ndim - 2):
         fn = jax.vmap(fn)
@@ -254,7 +444,8 @@ def lowrank_merge(w: Array, v: Array, b: Array) -> Array:
 
 def lowrank_project(g: Array, v: Array) -> Array:
     """G^T V (N, r) fp32 — the Thm.-1 lift used by project-style baselines."""
-    impl = TABLE["lowrank_project"][route("lowrank_project")]
+    impl = TABLE["lowrank_project"][route(
+        "lowrank_project", dtypes=(g.dtype, v.dtype))]
     fn = impl
     for _ in range(g.ndim - 2):
         fn = jax.vmap(fn)
@@ -263,17 +454,35 @@ def lowrank_project(g: Array, v: Array) -> Array:
 
 def subspace_adam(b: Array, g: Array, m: Array, v: Array, *, lr, step,
                   beta1: float = 0.9, beta2: float = 0.999,
-                  eps: float = 1e-8, wd: float = 0.0):
+                  eps: float = 1e-8, wd: float = 0.0,
+                  pack: Optional[PackSpec] = None):
     """Fused Adam on stacked subspace variables.
 
-    All four arrays share shape (..., n, r) fp32 — leading (group/expert)
-    dims are folded into rows so ONE kernel launch covers a whole group of
-    same-shape B leaves.  Returns (b', m', v') with the input shape.
+    b/m/v share shape (..., n, r) fp32 (masters/moments — never
+    downcast); g may arrive in the compute dtype and is cast up in VMEM.
+    Leading (group/expert) dims are folded into rows so ONE kernel launch
+    covers a whole group of same-shape B leaves.  On the Pallas route a
+    small rank (r < 128) is additionally *rank-packed* into a lane-aligned
+    multi-slot buffer (see :class:`PackSpec`) so the launch uses full
+    128-wide lanes; ``pack`` supplies the precomputed plan from
+    ``SubspaceLayout.packs`` (derived on the fly when absent).  Returns
+    (b', m', v') with the input shape.
     """
     shape = b.shape
     r = shape[-1]
     flat = [a.reshape(-1, r) for a in (b, g, m, v)]
-    impl = TABLE["subspace_adam"][route("subspace_adam")]
+    rt = route("subspace_adam",
+               dtypes=(b.dtype, g.dtype, m.dtype, v.dtype))
+    impl = TABLE["subspace_adam"][rt]
+    plan = None
+    if rt == "pallas":
+        plan = pack if pack is not None else rank_pack_plan(
+            flat[0].shape[0], r)
+        if plan.rows != flat[0].shape[0] or plan.r != r:
+            plan = rank_pack_plan(flat[0].shape[0], r)
+        flat = [_rank_pack(a, plan) for a in flat]
     nb, nm, nv = impl(*flat, lr=lr, step=step, beta1=beta1, beta2=beta2,
                       eps=eps, wd=wd)
+    if plan is not None and not plan.is_noop:
+        nb, nm, nv = (_rank_unpack(o, plan) for o in (nb, nm, nv))
     return nb.reshape(shape), nm.reshape(shape), nv.reshape(shape)

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._mixed import dotf as _dotf
+
 Array = jax.Array
 
 
@@ -47,16 +49,12 @@ def _kernel(dy_ref, w_ref, v_ref, b_ref, p_ref, dx_ref, db_ref, acc_ref, *,
 
     dy = dy_ref[...]                                     # (bm, bn)
     # dx row-strip: dy w_j^T + (dy b_j) v^T, f32 accumulate over j
-    q = jax.lax.dot(dy, b_ref[...],
-                    preferred_element_type=jnp.float32)  # (bm, r)
+    q = _dotf(dy, b_ref[...])                            # (bm, r)
     acc_ref[...] += (
-        jax.lax.dot(dy, w_ref[...].T, preferred_element_type=jnp.float32) +
-        jax.lax.dot(q, v_ref[...].T.astype(jnp.float32),
-                    preferred_element_type=jnp.float32))
+        _dotf(dy, w_ref[...].T) +
+        _dotf(q, v_ref[...].T.astype(jnp.float32)))
     # dB rows for this j block: accumulate dy^T p across the i sweep
-    db_ref[pl.ds(j * bn, bn), :] += jax.lax.dot(
-        dy.T, p_ref[...].astype(dy.dtype),
-        preferred_element_type=jnp.float32)
+    db_ref[pl.ds(j * bn, bn), :] += _dotf(dy.T, p_ref[...].astype(dy.dtype))
 
     @pl.when(j == n_j - 1)
     def _fin():

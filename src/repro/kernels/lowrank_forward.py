@@ -9,6 +9,10 @@ contraction (V is r columns, resident per K-tile), and the B^T term is a
 Tiling: grid (M/bm, N/bn, K/bk); x tile (bm, bk), w tile (bk, bn), v tile
 (bk, r); f32 scratch accumulators acc (bm, bn) and accp (bm, r) in VMEM.
 bm = bn = bk = 128 are MXU-native; r <= 512 keeps accp under 0.25 MB.
+
+Mixed precision: refs may carry different dtypes (bf16 compute slices over
+fp32 masters) — every contraction promotes its operands to a common dtype
+in VMEM and accumulates fp32; y/p are written in x's dtype.
 """
 from __future__ import annotations
 
@@ -18,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ._mixed import dotf as _dotf
 
 Array = jax.Array
 
@@ -36,21 +42,18 @@ def _kernel(x_ref, w_ref, v_ref, b_ref, o_ref, acc_ref, accp_ref, *,
         accp_ref[...] = jnp.zeros_like(accp_ref)
 
     x = x_ref[...]
-    acc_ref[...] += jax.lax.dot(
-        x, w_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += _dotf(x, w_ref[...])
 
     # p = x V is j-independent and the VMEM scratch persists across the
     # grid: compute it during the j == 0 slab only, reuse it afterwards.
     @pl.when(j == 0)
     def _accum_p():
-        accp_ref[...] += jax.lax.dot(
-            x, v_ref[...], preferred_element_type=jnp.float32)
+        accp_ref[...] += _dotf(x, v_ref[...])
 
     @pl.when(k == n_k - 1)
     def _finish():
-        o_ref[...] = (acc_ref[...] + jax.lax.dot(
-            accp_ref[...], b_ref[...].T,
-            preferred_element_type=jnp.float32)).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...] + _dotf(
+            accp_ref[...], b_ref[...].T)).astype(o_ref.dtype)
 
 
 def _kernel_p(x_ref, w_ref, v_ref, b_ref, o_ref, p_ref, acc_ref, accp_ref, *,

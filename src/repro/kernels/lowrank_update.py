@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# bf16 V draws meet the fp32 B master in the merge and the lift — all
+# dots go through the shared promote-in-VMEM helper
+from ._mixed import dotf as _dotf
+
 Array = jax.Array
 
 
@@ -26,8 +30,7 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 def _merge_kernel(w_ref, v_ref, b_ref, o_ref):
-    delta = jax.lax.dot(v_ref[...], b_ref[...].T,
-                        preferred_element_type=jnp.float32)
+    delta = _dotf(v_ref[...], b_ref[...].T)
     o_ref[...] = (w_ref[...].astype(jnp.float32) + delta).astype(o_ref.dtype)
 
 
@@ -63,8 +66,7 @@ def _project_kernel(g_ref, v_ref, o_ref, acc_ref, *, n_k: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot(
-        g_ref[...].T, v_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += _dotf(g_ref[...].T, v_ref[...])
 
     @pl.when(k == n_k - 1)
     def _fin():

@@ -4,6 +4,13 @@ On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
 body executes eagerly in Python, validating BlockSpec indexing and numerics
 against :mod:`ref`.  On TPU (``jax.default_backend() in {'tpu'}``) they
 compile to Mosaic.  ``interpret`` can be forced via REPRO_PALLAS_INTERPRET.
+
+These wrappers are the raw aligned-shape entry points (benchmarks, tests);
+the training hot path goes through :mod:`repro.kernels.dispatch`, which
+adds pad-to-tile, dtype-aware routing, rank packing and the per-
+``(op, padded shape, dtypes)`` kernel cache.  All kernels accept
+mixed-dtype operands (bf16 compute against fp32 masters) and accumulate
+in fp32 — see the casting contract in :mod:`repro.kernels.ref`.
 """
 from __future__ import annotations
 

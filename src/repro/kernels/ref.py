@@ -1,4 +1,11 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Casting contract (mirrored by the Pallas kernels and the dispatch-layer
+XLA impls): operands may be mixed-dtype — bf16 compute slices against fp32
+masters — and every contraction/elementwise chain accumulates in fp32.
+Outputs: forward y in x.dtype; merge W' in w.dtype; project and dB fp32;
+subspace-Adam b'/m'/v' fp32 (masters/moments never downcast).
+"""
 from __future__ import annotations
 
 import jax
@@ -32,10 +39,15 @@ def lowrank_project(g: Array, v: Array) -> Array:
 
 
 def subspace_adam(b, g, m, v, *, lr, beta1, beta2, eps, wd, step):
-    """Fused Adam-with-decay on the subspace variable B (all fp32)."""
+    """Fused Adam-with-decay on the subspace variable B.
+
+    b/m/v are the fp32 masters/moments; g may arrive in a reduced compute
+    dtype (cast up once).  Outputs are always fp32.
+    """
     g = g.astype(jnp.float32)
-    m2 = beta1 * m + (1 - beta1) * g
-    v2 = beta2 * v + (1 - beta2) * g * g
+    b = b.astype(jnp.float32)
+    m2 = beta1 * m.astype(jnp.float32) + (1 - beta1) * g
+    v2 = beta2 * v.astype(jnp.float32) + (1 - beta2) * g * g
     bc1 = 1.0 - beta1 ** step
     bc2 = 1.0 - beta2 ** step
     delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) + wd * b

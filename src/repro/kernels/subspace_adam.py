@@ -24,11 +24,14 @@ def _adam_kernel(sc_ref, b_ref, g_ref, m_ref, v_ref,
     lr = sc_ref[0]
     bc1 = sc_ref[1]
     bc2 = sc_ref[2]
+    # Only the gradient may arrive in a reduced compute dtype — it is cast
+    # up ONCE here, in VMEM; b/m/v are fp32 masters/moments in and out.
     g = g_ref[...].astype(jnp.float32)
-    m = beta1 * m_ref[...] + (1.0 - beta1) * g
-    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
-    delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * b_ref[...]
-    bo_ref[...] = b_ref[...] - lr * delta
+    b = b_ref[...].astype(jnp.float32)
+    m = beta1 * m_ref[...].astype(jnp.float32) + (1.0 - beta1) * g
+    v = beta2 * v_ref[...].astype(jnp.float32) + (1.0 - beta2) * g * g
+    delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * b
+    bo_ref[...] = b - lr * delta
     mo_ref[...] = m
     vo_ref[...] = v
 
@@ -37,7 +40,8 @@ def subspace_adam(b: Array, g: Array, m: Array, v: Array, *, lr, step,
                   beta1: float = 0.9, beta2: float = 0.999,
                   eps: float = 1e-8, wd: float = 0.0, block: int = 256,
                   interpret: bool = False):
-    """All inputs (N, r) fp32; returns (b', m', v')."""
+    """b/m/v (N, r) fp32 masters/moments; g may be a reduced compute dtype
+    (cast up in VMEM).  Returns (b', m', v'), always fp32."""
     N, r = b.shape
     blk = min(block, N)
     assert N % blk == 0

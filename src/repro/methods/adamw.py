@@ -30,4 +30,6 @@ class AdamWMethod(Method):
         return {**super().describe(),
                 "gradient": "full backprop (k x n materialised)",
                 "optimizer_state": "full m/v (2 floats per param)",
-                "projection": "none"}
+                "projection": "none",
+                "compute": "weight read-view in compute_dtype; fp32 "
+                           "moments and master update"}

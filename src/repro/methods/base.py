@@ -79,7 +79,9 @@ class Method(abc.ABC):
                 "checkpoint_tag": self.checkpoint_tag,
                 "gradient": "(undescribed)",
                 "optimizer_state": "(undescribed)",
-                "projection": "(undescribed)"}
+                "projection": "(undescribed)",
+                "compute": "tcfg.compute_dtype (auto: bf16 on TPU/GPU) "
+                           "reads; fp32 masters/moments"}
 
     def __repr__(self) -> str:  # registry listings
         return f"<Method {self.name} ({self.family})>"

@@ -48,4 +48,6 @@ class GaLoreMethod(Method):
                 "projection": "top-r singular basis of the full gradient, "
                               "SVD-refreshed every lazy_k steps (data-"
                               "dependent; not unbiased in the paper's "
-                              "Definition-3 sense)"}
+                              "Definition-3 sense)",
+                "compute": "weight read-view + stored U in compute_dtype; "
+                           "fp32 SVD, projection and moments"}

@@ -51,7 +51,10 @@ class LowRankAdamMethod(_LowRankBase):
                             "never materialised)",
                 "optimizer_state": "subspace m/v over B + V per group",
                 "projection": "random admissible V, resampled every "
-                              "lazy_k steps"}
+                              "lazy_k steps",
+                "compute": "packed W/B/V slices + stored V in "
+                           "compute_dtype; fp32 B masters, moments and "
+                           "merge accumulate"}
 
 
 @register("lowrank_lr")

@@ -136,3 +136,45 @@ def act_dtype(cfg) -> jnp.dtype:
 
 def prm_dtype(cfg) -> jnp.dtype:
     return DTYPES[cfg.param_dtype]
+
+
+def resolve_compute_dtype(tcfg=None) -> jnp.dtype:
+    """The hot-path compute dtype: what the packed B/V/W slices, the fused
+    forward/backward and the merge *read*.  Adam moments and master
+    buffers always stay fp32 regardless of this knob.
+
+    Resolution order: ``REPRO_COMPUTE_DTYPE`` env override, then
+    ``tcfg.compute_dtype``, then ``auto`` = bf16 on accelerators (TPU/GPU,
+    where the MXU natively eats bf16 and HBM bytes are the bottleneck),
+    fp32 on CPU (where bf16 is emulated and tests want exact numerics).
+    """
+    import os
+
+    name = os.environ.get("REPRO_COMPUTE_DTYPE") or (
+        getattr(tcfg, "compute_dtype", "auto") if tcfg is not None
+        else "auto")
+    if name in ("auto", ""):
+        import jax
+        return (jnp.bfloat16 if jax.default_backend() in ("tpu", "gpu")
+                else jnp.float32)
+    if name not in DTYPES:
+        raise ValueError(
+            f"compute_dtype {name!r}: expected one of "
+            f"{', '.join(sorted(DTYPES))} or 'auto'")
+    return DTYPES[name]
+
+
+def compute_view(tree, cdt):
+    """Reduced-precision read view of a weight tree for the loss/backprop.
+
+    Floating leaves are cast to ``cdt`` (no-op at fp32); everything the
+    optimizer updates — the masters — stays full precision, and gradients
+    flow back through the cast into the master dtype.  Shared by the dense
+    ``adamw`` baseline and GaLore so both train at the same effective
+    precision.
+    """
+    if cdt == jnp.float32:
+        return tree
+    return jax.tree.map(
+        lambda x: x.astype(cdt)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)

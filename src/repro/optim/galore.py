@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import dispatch
+from ..models.common import compute_view as _compute_view
+from ..models.common import resolve_compute_dtype
 from .adamw import clip_by_global_norm
 from .subspace import GroupedLowRankSlot, SubspaceState, _dense_adam
 
@@ -129,17 +131,22 @@ def update(full_grads, params, state: SubspaceState, *, lr, tcfg,
         fn = _top_r_basis
         for _ in range(gs.ndim - 2):
             fn = jax.vmap(fn, in_axes=(0, None))
+        # U is stored in the layout's compute dtype (like the subspace
+        # paradigms' V): the SVD runs fp32, one cast per refresh.
+        refreshed = lambda g: fn(g, r).astype(slot.proj.dtype)
         if isinstance(refresh, jax.Array):
-            proj = jax.lax.cond(refresh, lambda g: fn(g, r),
+            proj = jax.lax.cond(refresh, refreshed,
                                 lambda g: slot.proj, gs)
         else:
-            proj = fn(gs, r) if refresh else slot.proj
+            proj = refreshed(gs) if refresh else slot.proj
         # project: R = U^T G -> (n, r), through the shared kernel path
+        # (fp32 accumulate over the possibly-reduced-precision U)
         rproj = dispatch.lowrank_project(gs, proj)
         m = b1 * slot.m + (1 - b1) * rproj
         v = b2 * slot.v + (1 - b2) * rproj * rproj
         delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-        lifted = jnp.einsum("...kr,...nr->...kn", proj, delta)
+        lifted = jnp.einsum("...kr,...nr->...kn",
+                            proj.astype(jnp.float32), delta)
         if tcfg.weight_decay:
             lifted = lifted + tcfg.weight_decay * ws
         new_ws = ws - lr * lifted
@@ -168,7 +175,9 @@ def make_train_step(cfg, tcfg, loss_fn=None):
     which folds the cadence into the step as a traced condition —
     ``tests/test_methods.py`` asserts both are bit-identical."""
     from ..train import steps as steps_mod
-    loss_fn = loss_fn or steps_mod.build_loss_fn(cfg)
+    base_loss = loss_fn or steps_mod.build_loss_fn(cfg)
+    cdt = resolve_compute_dtype(tcfg)
+    loss_fn = lambda p, mb: base_loss(_compute_view(p, cdt), mb)
 
     def train_step(params, opt_state, batch, refresh: bool):
         lr = steps_mod._lr_at(tcfg, opt_state.step)
@@ -193,7 +202,9 @@ def make_inner_step(cfg, tcfg, loss_fn=None):
     """
     from ..train import steps as steps_mod
     from .adamw import global_norm
-    loss_fn = loss_fn or steps_mod.build_loss_fn(cfg)
+    base_loss = loss_fn or steps_mod.build_loss_fn(cfg)
+    cdt = resolve_compute_dtype(tcfg)
+    loss_fn = lambda p, mb: base_loss(_compute_view(p, cdt), mb)
 
     def train_step(params, opt_state, batch):
         lr = steps_mod._lr_at(tcfg, opt_state.step)

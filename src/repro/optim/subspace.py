@@ -40,6 +40,17 @@ Master-weight layout — grouped end-to-end:
   public entry point here accepts either representation, with the raw-tree
   path kept as the per-leaf-weights reference.
 
+Mixed precision (the ``compute_dtype`` knob, default bf16 on TPU/GPU):
+  The layout pins a compute dtype (``SubspaceLayout.compute_dtype``).  V
+  buffers are *stored* in it (drawn fp32, cast once per resample) and
+  :func:`packed_params` casts the B and W slices to it, so the fused
+  forward/backward and the merge read half-width operands with fp32
+  accumulators.  B masters, Adam moments, dense weights and the grouped
+  master-weight buffers are NEVER downcast — asserted by jaxpr/aval
+  inspection in tests/test_mixed_precision.py.  Small-rank groups are
+  additionally rank-packed (``SubspaceLayout.packs``) into lane-aligned
+  multi-slot buffers before the batched subspace-Adam launch.
+
 Leaf classification:
   * 2-D weights with min(dim) >= min_dim_for_lowrank and not name-excluded
     -> low-rank; convention W (k, n_out): V (k, r), B (n_out, r),
@@ -65,6 +76,7 @@ import jax.numpy as jnp
 
 from ..core import samplers
 from ..kernels import dispatch, ref
+from ..models.common import DTYPES, resolve_compute_dtype
 from ..models.linear import LRPack
 from .adamw import clip_by_global_norm
 
@@ -115,10 +127,21 @@ class GroupSpec(NamedTuple):
 
 
 class SubspaceLayout(NamedTuple):
-    """Static index map param-tree <-> grouped state (pytree metadata)."""
+    """Static index map param-tree <-> grouped state (pytree metadata).
+
+    ``compute_dtype`` (canonical name, e.g. ``"bfloat16"``) is the hot-path
+    compute precision this layout was built for: V buffers are *stored* in
+    it and the packed B/W slices are cast to it per step, while B masters,
+    Adam moments and master weights stay fp32/param-dtype.  ``packs`` holds
+    one static :class:`repro.kernels.dispatch.PackSpec` per group — the
+    lane-aligned rank-packing plan the batched subspace-Adam launches use
+    for small ranks (computed once here, never re-derived per step).
+    """
     n_leaves: int
     dense_idx: Tuple[int, ...]
     groups: Tuple[GroupSpec, ...]
+    compute_dtype: str = "float32"
+    packs: Tuple[dispatch.PackSpec, ...] = ()
 
 
 @functools.partial(
@@ -189,9 +212,21 @@ def _rank_for(shape, tcfg) -> int:
     return max(1, min(tcfg.rank, min(k, n_out) // 2))
 
 
+def _pack_for(spec: GroupSpec) -> dispatch.PackSpec:
+    """Static rank-packing plan for one group's flattened B/m/v buffer."""
+    rows = len(spec.leaf_idx)
+    for d in spec.shape[:-2]:
+        rows *= d
+    rows *= spec.shape[-1]          # n_out rows per member
+    return dispatch.rank_pack_plan(rows, spec.rank)
+
+
 def build_layout(params, tcfg) -> SubspaceLayout:
     """Classify leaves once; same-shape/same-rank low-rank leaves share a
-    group.  Pure Python over shapes — safe under jax.eval_shape."""
+    group.  Pure Python over shapes — safe under jax.eval_shape.  The
+    layout also pins the run's compute dtype (resolved from
+    ``tcfg.compute_dtype`` / REPRO_COMPUTE_DTYPE / the backend) and each
+    group's rank-packing plan."""
     leaves = jax.tree_util.tree_flatten_with_path(params_of(params))[0]
     dense_idx = []
     by_sig: dict = {}
@@ -204,8 +239,10 @@ def build_layout(params, tcfg) -> SubspaceLayout:
             dense_idx.append(i)
     groups = tuple(GroupSpec(shape=sig[0], rank=sig[1], leaf_idx=tuple(idx))
                    for sig, idx in by_sig.items())
+    cdt = jnp.dtype(resolve_compute_dtype(tcfg)).name
     return SubspaceLayout(n_leaves=len(leaves), dense_idx=tuple(dense_idx),
-                          groups=groups)
+                          groups=groups, compute_dtype=cdt,
+                          packs=tuple(_pack_for(s) for s in groups))
 
 
 # ---------------------------------------------------------------------------
@@ -270,6 +307,7 @@ def init(params, tcfg, key: Array) -> SubspaceState:
     projections (one batched draw per group), zero moments."""
     params = params_of(params)
     layout = build_layout(params, tcfg)
+    cdt = DTYPES[layout.compute_dtype]
     flat_p = jax.tree.leaves(params)
     keys = jax.random.split(key, len(layout.groups) + 1)
     dense = tuple(
@@ -284,8 +322,11 @@ def init(params, tcfg, key: Array) -> SubspaceState:
         energy = (jnp.zeros((n_members, k_dim), jnp.float32)
                   if tcfg.sampler == "dependent_diag"
                   else jnp.zeros((n_members, 0), jnp.float32))
+        # V is stored in the compute dtype (drawn in fp32, cast once):
+        # it is re-sampled every outer iteration, so reduced-precision
+        # storage costs one rounding, never an accumulated drift.
         proj = _sample_proj_group(tcfg.sampler, keys[g], spec, n_members,
-                                  tcfg.c, energy)
+                                  tcfg.c, energy, dtype=cdt)
         b = jnp.zeros((n_members,) + lead + (n_out, spec.rank), jnp.float32)
         groups.append(GroupedLowRankSlot(
             proj=proj, b=b, m=jnp.zeros_like(b), v=jnp.zeros_like(b),
@@ -372,11 +413,17 @@ def packed_params(params, state: SubspaceState, trainable: Trainable,
     """Model-facing tree: LRPack(w, B[g], V[g]) at low-rank leaves, the
     trainable value at dense leaves.
 
-    ``B[g]`` / ``V[g]`` are *slices* of the group's stacked buffer (one
-    cast per group, then static-index slices) — under jit these alias the
-    donated group buffer instead of copying it.  With grouped master
-    weights the base ``w`` of each LRPack is a slice of the stacked weight
-    buffer the same way.
+    ``B[g]`` / ``V[g]`` / ``W[g]`` are *slices* of the group's stacked
+    buffer (one cast per group, then static-index slices) — under jit
+    these alias the donated group buffer instead of copying it.  With
+    grouped master weights the base ``w`` of each LRPack is a slice of the
+    stacked weight buffer the same way.
+
+    ``dtype`` is the compute dtype of the packed views: all three pack
+    members (W, B, V) are cast to it so the fused forward/backward reads
+    reduced-precision operands with fp32 accumulation; the fp32 B masters
+    and the stored master weights themselves are untouched (the cast is a
+    read-side view, autodiff routes the B cotangent back up to fp32).
     """
     cast = (lambda x: x.astype(dtype)) if dtype else (lambda x: x)
     grouped = isinstance(params, GroupedParams)
@@ -391,9 +438,10 @@ def packed_params(params, state: SubspaceState, trainable: Trainable,
     for g, spec in enumerate(state.layout.groups):
         tb = cast(trainable.groups[g])
         tv = cast(state.groups[g].proj)
-        wg = params.groups[g] if grouped else None
+        wg = cast(params.groups[g]) if grouped else None
         for j, i in enumerate(spec.leaf_idx):
-            out[i] = LRPack(wg[j] if grouped else flat_p[i], tb[j], tv[j])
+            out[i] = LRPack(wg[j] if grouped else cast(flat_p[i]),
+                            tb[j], tv[j])
     return jax.tree.unflatten(treedef, out)
 
 
@@ -428,8 +476,9 @@ def _group_energy_update(slot: GroupedLowRankSlot, g32) -> Array:
     batched over the whole group (leading expert dims averaged per member)."""
     if not slot.energy.shape[-1]:
         return slot.energy
+    proj32 = slot.proj.astype(jnp.float32)   # V may be stored bf16
     mm = jnp.einsum("...nr,...ns->...rs", g32, g32)
-    e = jnp.einsum("...kr,...rs,...ks->...k", slot.proj, mm, slot.proj)
+    e = jnp.einsum("...kr,...rs,...ks->...k", proj32, mm, proj32)
     if e.ndim > 2:  # (G,) + lead + (k,): average the stacked-expert dims
         e = e.mean(axis=tuple(range(1, e.ndim - 1)))
     return 0.99 * slot.energy + 0.01 * e
@@ -487,12 +536,14 @@ def inner_update(grads: Trainable, trainable: Trainable, params,
     # inside the subspace we decay B directly (equivalent to decaying the
     # increment — standard in GaLore-style training).
     new_groups, new_tgroups = [], []
-    for slot, g in zip(state.groups, grads.groups):
+    packs = state.layout.packs
+    for gi, (slot, g) in enumerate(zip(state.groups, grads.groups)):
         g32 = g.astype(jnp.float32)
         nb, nm, nv = dispatch.subspace_adam(
             slot.b, g32, slot.m, slot.v, lr=lr, step=stepf,
             beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
-            wd=float(tcfg.weight_decay))
+            wd=float(tcfg.weight_decay),
+            pack=packs[gi] if gi < len(packs) else None)
         new_groups.append(GroupedLowRankSlot(
             proj=slot.proj, b=nb, m=nm, v=nv,
             energy=_group_energy_update(slot, g32)))
@@ -550,7 +601,8 @@ def outer_merge_resample(params, state: SubspaceState, tcfg):
             for j, i in enumerate(spec.leaf_idx):
                 new_flat_p[i] = merged[j]
         proj = _sample_proj_group(tcfg.sampler, gkeys[g], spec,
-                                  len(spec.leaf_idx), tcfg.c, slot.energy)
+                                  len(spec.leaf_idx), tcfg.c, slot.energy,
+                                  dtype=slot.proj.dtype)
         b = jnp.zeros_like(slot.b)
         if tcfg.reset_moments:
             m, v = jnp.zeros_like(b), jnp.zeros_like(b)
@@ -651,7 +703,8 @@ def outer_merge_resample_ref(params, state: SubspaceState, tcfg):
                                             slot.b[j])
             new_flat_p[i] = merged
             projs.append(_sample_proj(tcfg.sampler, keys[i], flat_p[i].shape,
-                                      spec.rank, tcfg.c, slot.energy[j]))
+                                      spec.rank, tcfg.c, slot.energy[j],
+                                      dtype=slot.proj.dtype))
         b = jnp.zeros_like(slot.b)
         if tcfg.reset_moments:
             m, v = jnp.zeros_like(b), jnp.zeros_like(b)

@@ -152,7 +152,11 @@ def state_pspecs(mesh: Mesh, specs, state) -> Any:
         # expert Vs on deepseek are ~23 GB — must shard).  Judged per
         # member, not on the (G,)-stacked buffer: grouping several small
         # same-shape Vs must not flip them into the all-reduce regime.
-        v_bytes = 4 * np.prod(slot.proj.shape[1:]) if hasattr(
+        # Sized with V's REAL itemsize — a bf16-compute run stores V at
+        # half width, so twice the members fit under the replicate cap.
+        v_item = (np.dtype(slot.proj.dtype).itemsize
+                  if hasattr(slot.proj, "dtype") else 4)
+        v_bytes = v_item * np.prod(slot.proj.shape[1:]) if hasattr(
             slot.proj, "shape") else 0
         v_k = None if v_bytes < 64 * 2**20 else k_ax
         proj = P(*([None] + lead + [v_k, None]))

@@ -12,6 +12,13 @@ Properties required at 1000-node scale, implemented here:
     artifact is mesh-independent, so DP/TP width can change across restarts.
 
 Storage is one ``.npz`` per checkpoint (zip of npy) + a JSON manifest.
+
+Mixed precision: the manifest records every leaf's dtype (``dtypes``) and
+restore fills the *template's* dtype — an fp32 checkpoint restores into a
+bf16 run (and vice versa) with one cast per leaf.  bfloat16 is not a
+native numpy dtype: ``np.savez`` round-trips it as an opaque void scalar,
+which :func:`_undo_void` re-views using the manifest's dtype tag (CRCs are
+byte-level, so integrity checking is unaffected).
 """
 from __future__ import annotations
 
@@ -23,9 +30,29 @@ import zlib
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 SEP = "||"
+
+
+def _undo_void(arr: np.ndarray, key: str, manifest: dict,
+               tleaf=None) -> np.ndarray:
+    """Re-view a void-dtype array (numpy's round-trip of bfloat16 & co.)
+    as its true dtype: the manifest's ``dtypes`` tag when present, else
+    the template leaf's dtype (legacy manifests)."""
+    if arr.dtype.kind != "V":
+        return arr
+    name = (manifest.get("dtypes") or {}).get(key)
+    try:
+        want = np.dtype(jnp.dtype(name)) if name else np.dtype(tleaf.dtype)
+    except (TypeError, AttributeError):
+        if tleaf is None:
+            raise IOError(
+                f"checkpoint leaf {key!r} has an opaque dtype and no "
+                f"manifest dtype tag to decode it")
+        want = np.dtype(tleaf.dtype)
+    return arr.view(want)
 
 
 def _is_prng_key(x) -> bool:
@@ -82,10 +109,11 @@ def _migrate_legacy_subspace(npz, manifest: dict, template: Any) -> dict:
             continue
         data = {}
         for k in legacy_keys:  # verify source integrity before re-stacking
-            data[k] = npz[k]
-            crc = zlib.crc32(data[k].tobytes())
+            arr = npz[k]
+            crc = zlib.crc32(arr.tobytes())
             if crc != manifest["crc"].get(k):
                 raise IOError(f"checkpoint corruption at legacy leaf {k!r}")
+            data[k] = _undo_void(arr, k, manifest)
         # Group the field records by leaf path, preserving archive order
         # (== the params-tree flatten order the layout indexes refer to).
         order, fields = [], {}
@@ -167,10 +195,11 @@ def _migrate_legacy_grouped_params(npz, manifest: dict, template: Any) -> dict:
                 f"{layout.n_leaves}")
         data = {}
         for k in order:  # verify source integrity before re-stacking
-            data[k] = npz[k]
-            crc = zlib.crc32(data[k].tobytes())
+            arr = npz[k]
+            crc = zlib.crc32(arr.tobytes())
             if crc != manifest["crc"].get(k):
                 raise IOError(f"checkpoint corruption at legacy weight {k!r}")
+            data[k] = _undo_void(arr, k, manifest)
         for di, i in enumerate(layout.dense_idx):
             want = tuple(node.dense[di].shape)
             if tuple(data[order[i]].shape) != want:
@@ -207,6 +236,9 @@ def save(workdir: str, step: int, tree: Any, *, keep: int = 3,
         "step": int(step),
         "crc": {k: zlib.crc32(v.tobytes()) for k, v in flat.items()},
         "shapes": {k: list(v.shape) for k, v in flat.items()},
+        # dtype provenance: lets restore re-view non-native dtypes
+        # (bfloat16) and makes precision drift auditable across resumes
+        "dtypes": {k: v.dtype.name for k, v in flat.items()},
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -286,6 +318,7 @@ def restore(workdir: str, step: int, template: Any,
             if crc != manifest["crc"][key]:
                 raise IOError(f"checkpoint corruption at leaf {key!r} "
                               f"(crc {crc} != {manifest['crc'][key]})")
+            arr = _undo_void(arr, key, manifest, tleaf)
         elif key in migrated:  # legacy->grouped keys: sources CRC-checked
             arr = migrated[key]
         else:

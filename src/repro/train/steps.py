@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, TrainConfig
 from ..models import encdec, lm
-from ..models.common import act_dtype
+from ..models.common import act_dtype, compute_view, resolve_compute_dtype
 from ..optim import adamw, subspace, zo
 from ..optim.schedule import SCHEDULES
 from .loss import chunked_ce
@@ -60,7 +60,15 @@ def _lr_at(tcfg: TrainConfig, step):
                  total_steps=tcfg.total_steps)
 
 
-def _pack_dtype(cfg):
+def _pack_dtype(cfg, tcfg: Optional[TrainConfig] = None):
+    """Dtype the packed (W, B, V) views are cast to for the fused
+    forward/backward: the run's resolved compute dtype when reduced (the
+    mixed-precision hot path — masters/moments stay fp32), else the
+    model's activation dtype, else None (no cast)."""
+    if tcfg is not None:
+        cdt = resolve_compute_dtype(tcfg)
+        if cdt != jnp.float32:
+            return cdt
     dt = act_dtype(cfg)
     return dt if dt != jnp.float32 else None
 
@@ -83,7 +91,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     losses over equal splits).
     """
     loss_fn = loss_fn or build_loss_fn(cfg)
-    pdt = _pack_dtype(cfg)
+    pdt = _pack_dtype(cfg, tcfg)
 
     def train_step(params, opt_state: subspace.SubspaceState, batch):
         # ``params`` is either the model tree or (the Trainer's canonical
@@ -133,10 +141,16 @@ def make_outer_step(cfg: ModelConfig, tcfg: TrainConfig):
 def make_adamw_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                           loss_fn: Optional[Callable] = None):
     loss_fn = loss_fn or build_loss_fn(cfg)
+    cdt = resolve_compute_dtype(tcfg)
 
     def train_step(params, opt_state: adamw.AdamWState, batch):
+        # mixed precision for the dense baseline too: the loss reads a
+        # reduced-precision view of the weights; the fp32/param-dtype
+        # masters are what AdamW updates (grads flow back through the
+        # cast, so they land in the master dtype).
         lr = _lr_at(tcfg, opt_state.step)
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = jax.value_and_grad(
+            lambda p, mb: loss_fn(compute_view(p, cdt), mb))(params, batch)
         new_params, new_state, gn = adamw.update(
             grads, opt_state, params, lr=lr, beta1=tcfg.beta1,
             beta2=tcfg.beta2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
@@ -154,7 +168,7 @@ def make_adamw_train_step(cfg: ModelConfig, tcfg: TrainConfig,
 def make_zo_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                        loss_fn: Optional[Callable] = None):
     loss_fn = loss_fn or build_loss_fn(cfg)
-    pdt = _pack_dtype(cfg)
+    pdt = _pack_dtype(cfg, tcfg)
 
     def train_step(params, opt_state: subspace.SubspaceState, batch):
         lr = _lr_at(tcfg, opt_state.step)

@@ -24,6 +24,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig, TrainConfig
 from ..models import encdec, lm
+from ..models.common import resolve_compute_dtype
 from ..optim import subspace
 from .. import methods
 from . import checkpoint as ckpt
@@ -60,6 +61,12 @@ class Trainer:
         # unknown tcfg.optimizer raises here, listing methods.available(),
         # BEFORE the expensive model param init.
         self.method = methods.get(tcfg.optimizer)
+
+        # Resolved ONCE per run and recorded in every checkpoint manifest:
+        # the hot-path compute dtype (bf16 on accelerators by default).
+        # Restore casts leaves into the template's dtypes, so an fp32
+        # checkpoint resumes cleanly into a bf16 run and vice versa.
+        self.compute_dtype = np.dtype(resolve_compute_dtype(tcfg)).name
 
         model = encdec if cfg.is_encoder_decoder else lm
         key = jax.random.key(tcfg.seed)
@@ -128,7 +135,8 @@ class Trainer:
                   {"params": self.params, "opt": self.opt_state},
                   keep=self.keep,
                   extra={"arch": self.cfg.name,
-                         "method": self.method.checkpoint_tag})
+                         "method": self.method.checkpoint_tag,
+                         "compute_dtype": self.compute_dtype})
 
     # -- main loop ----------------------------------------------------------
 

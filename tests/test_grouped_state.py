@@ -173,10 +173,13 @@ def test_batched_stiefel_resample_is_haar_scaled():
     _, state2 = subspace.outer_merge_resample(params, state, tcfg)
     for spec, slot in zip(state2.layout.groups, state2.groups):
         k, r = spec.shape[-2], spec.rank
-        v2 = np.asarray(slot.proj).reshape(-1, k, r)
+        # V draws are fp32; bf16-compute runs store them reduced, so the
+        # orthogonality condition holds to storage rounding (~0.4%/entry)
+        tol = 1e-4 if slot.proj.dtype == jnp.float32 else 2e-2 * (k / r)
+        v2 = np.asarray(slot.proj, np.float32).reshape(-1, k, r)
         for v in v2:
             np.testing.assert_allclose(v.T @ v, (k / r) * np.eye(r),
-                                       rtol=1e-4, atol=1e-4)
+                                       rtol=tol, atol=tol)
 
 
 def test_trainable_and_packed_share_group_buffers():
