@@ -42,6 +42,11 @@ GATED = {
 # both sides of the ratio are computed analytically in the SAME run)
 MIN_BF16_BYTES_REDUCTION = 0.35
 
+# the traced health guard (non-finite + spike detection + lax.cond skip)
+# must stay ~free on the hot path: guarded/raw inner-step ms, both timed
+# in the SAME run (host-independent), may not exceed 1 + this fraction
+MAX_GUARD_OVERHEAD = 0.25
+
 
 def _ratio(record: dict, key: str, ref_key: str):
     value, ref = record.get(key), record.get(ref_key)
@@ -114,9 +119,32 @@ def check_dtype_bytes(fresh: dict) -> list[str]:
     return failures
 
 
+def check_guard_overhead(fresh: dict) -> list[str]:
+    """Resilience gate (baseline-free): the health-guarded inner step vs
+    the raw inner step, both timed in the same run on the same route.
+    The guard is a handful of scalar reductions + a ``select_n`` over
+    buffers the step already touches — if its ratio exceeds the ceiling,
+    the skip-step machinery started costing real hot-path time."""
+    ts = fresh.get("train_step", {})
+    raw, guarded = ts.get("inner_step_xla_ms"), ts.get("inner_step_guarded_ms")
+    if not raw or guarded is None:
+        return ["train_step: inner_step_guarded_ms missing from fresh run "
+                "(kernel_bench must time the health-guarded step)"]
+    rel = guarded / raw
+    limit = 1.0 + MAX_GUARD_OVERHEAD
+    status = "FAIL" if rel > limit else "ok"
+    print(f"[{status}] health guard: guarded {guarded:.3f} ms vs raw "
+          f"{raw:.3f} ms -> {rel:.2f}x, limit {limit:.2f}x")
+    if rel > limit:
+        return [f"health-guarded inner step costs {rel:.2f}x the raw step "
+                f"(limit {limit:.2f}x)"]
+    return []
+
+
 def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     failures = check_methods_registry(fresh)
     failures += check_dtype_bytes(fresh)
+    failures += check_guard_overhead(fresh)
     base_g = baseline.get("grouped_state", {})
     fresh_g = fresh.get("grouped_state", {})
     # the ms-ratio gate only means something dtype-vs-same-dtype: a bf16

@@ -176,10 +176,23 @@ def bench_train_step() -> dict:
         p, o, metr = step(params, opt, batch)
         return metr["loss"]
 
+    # The guarded step (health non-finite + spike detection fused into the
+    # same jitted program) — its ms-ratio vs the raw step is the "the
+    # guard is free" acceptance gate in check_regression.py
+    from repro.train import health as health_mod
+    hstate = health_mod.init_health()
+    gstep = jax.jit(health_mod.guard_inner_step(
+        method.make_inner_step(cfg, tcfg), tcfg))
+
+    def run_guarded():
+        p, o, h, metr = gstep(params, opt, hstate, batch)
+        return metr["health"]
+
     prev = os.environ.get("REPRO_KERNEL_DISPATCH")
     try:
         os.environ["REPRO_KERNEL_DISPATCH"] = "xla"
         xla_ms = 1e3 * _timeit(run, iters=5)
+        guarded_ms = 1e3 * _timeit(run_guarded, iters=5)
         routed_ms = xla_ms
         if jax.default_backend() == "tpu":
             os.environ.pop("REPRO_KERNEL_DISPATCH", None)
@@ -199,6 +212,9 @@ def bench_train_step() -> dict:
             "compute_dtype": opt.layout.compute_dtype,
             "inner_step_xla_ms": xla_ms,
             "inner_step_dispatch_ms": routed_ms,
+            # health-guarded step on the same route: the skip-step guard
+            # must be ~free (gated at <= 25% overhead in check_regression)
+            "inner_step_guarded_ms": guarded_ms,
             "inner_bytes_by_dtype": {
                 "float32": bytes_f32["bytes"],
                 "bfloat16": bytes_bf16["bytes"],

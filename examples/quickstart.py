@@ -50,7 +50,19 @@ tcfg = TrainConfig(
     # projections are read/written at half width (the roofline win — every
     # hot-path op is memory-bound), while B masters, Adam moments and the
     # master weights stay fp32 and every kernel accumulates in fp32.
-    compute_dtype="auto")
+    compute_dtype="auto",
+    # --- resilience: the traced health guard + host escalation ------------
+    # Every inner step is wrapped (inside the SAME jitted program — no
+    # extra host sync) with non-finite detection on loss/grads/update and
+    # an EMA z-score loss-spike detector; a bad step is SKIPPED via
+    # lax.cond, leaving params and the grouped state bit-identical.
+    # max_consecutive_skips skips in a row escalate on the host: restore
+    # the last good checkpoint, multiply the LR by rollback_backoff,
+    # reseed the sampler key (fresh Haar–Stiefel draw — unbiasedness
+    # untouched), at most max_rollbacks times.  health_guard=False
+    # restores the unguarded step.
+    health_guard=True, spike_zscore=6.0, spike_warmup=20,
+    max_consecutive_skips=3, rollback_backoff=0.5, max_rollbacks=3)
 
 from repro.models.common import resolve_compute_dtype  # noqa: E402
 import numpy as np  # noqa: E402
@@ -96,5 +108,11 @@ report = trainer.run(60, log_every=10)
 print(f"\nloss {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
       f"over {report.steps_run} steps "
       f"({1e3*sum(report.step_times)/len(report.step_times):.0f} ms/step)")
+# the health guard rode along inside the jitted step the whole time:
+print(f"health: {report.skipped_steps} skipped steps, "
+      f"{report.rollbacks} rollbacks"
+      + (f" (lr backed off to {trainer.tcfg.lr:g})" if report.rollbacks
+         else ""))
 assert report.losses[-1] < report.losses[0]
+assert report.skipped_steps == 0 and report.rollbacks == 0
 print("quickstart OK")

@@ -183,4 +183,13 @@ class TrainConfig:
     compute_dtype: str = "auto"       # hot-path compute: 'auto' (bf16 on
                                       # TPU/GPU, fp32 on CPU) | 'bfloat16' |
                                       # 'float32'; masters/moments stay fp32
+
+    # --- resilience (train/health.py + Trainer escalation) ---
+    health_guard: bool = True         # traced non-finite/spike skip guard
+    spike_zscore: float = 6.0         # EMA z-score that flags a loss spike
+    spike_ema: float = 0.99           # EMA decay of the loss mean/variance
+    spike_warmup: int = 20            # accepted steps before the detector arms
+    max_consecutive_skips: int = 3    # N consecutive skips -> rollback
+    rollback_backoff: float = 0.5     # LR multiplier applied per rollback
+    max_rollbacks: int = 3            # bounded retries; exhausted -> stop run
     seed: int = 0

@@ -16,6 +16,7 @@ they call these five hooks through ``methods.get(tcfg.optimizer)``:
 from __future__ import annotations
 
 import abc
+import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
 
@@ -67,6 +68,26 @@ class Method(abc.ABC):
         ``jax.eval_shape`` over ``init``).  Feed the results to
         ``sharding.rules.named_shardings``.
         """
+
+    def reseed(self, params, opt_state, key, tcfg) -> Tuple[Any, Any]:
+        """Rotate the paradigm's stochastic draw state after an anomaly
+        rollback, so a bad V/perturbation draw is not replayed verbatim
+        when the Trainer restores the last good checkpoint.
+
+        Default: replace an ``opt_state.key`` PRNG leaf when the state
+        carries one (dataclass or NamedTuple), else a no-op — correct for
+        paradigms with no sampling (dense AdamW) or a data-dependent
+        projection (GaLore's SVD refresh re-derives itself).  Subspace
+        paradigms override this to also draw a fresh projection.
+        """
+        if hasattr(opt_state, "key"):
+            try:
+                return params, dataclasses.replace(opt_state, key=key)
+            except TypeError:
+                pass
+            if hasattr(opt_state, "_replace"):
+                return params, opt_state._replace(key=key)
+        return params, opt_state
 
     def describe(self) -> Dict[str, str]:
         """Human/table-facing description (memory & walltime tables).

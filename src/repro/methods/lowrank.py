@@ -9,6 +9,7 @@ path (IPA) vs the antithetic two-point forward-only estimate (LR/ZO).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional
 
 from ..optim import subspace
@@ -34,6 +35,15 @@ class _LowRankBase(Method):
     def pspecs(self, mesh, specs, params_abs, opt_abs):
         return rules.grouped_param_pspecs(mesh, specs, params_abs), \
             rules.state_pspecs(mesh, specs, opt_abs)
+
+    def reseed(self, params, opt_state, key, tcfg):
+        """Anomaly-rollback reseed: swap in the fresh key, then run one
+        outer merge+resample — function-preserving (W += V Bᵀ, B zeroed)
+        and the offending V draw is replaced by a fresh draw from the
+        paradigm's own admissible law (Haar–Stiefel by default), so
+        unbiasedness is untouched."""
+        state = dataclasses.replace(opt_state, key=key)
+        return subspace.outer_merge_resample(params, state, tcfg)
 
 
 @register("lowrank_adam")

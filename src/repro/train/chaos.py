@@ -1,0 +1,173 @@
+"""Deterministic fault-injection harness for resilience testing.
+
+Every failure mode the resilient training loop must survive is injectable
+here, deterministically and seed-driven, so ``tests/test_resilience.py``
+can chaos-test every registered method without flaky sleeps or real
+preemptions:
+
+  * ``grad_nan_steps`` — poison the gradient estimate (NaN or inf) at
+    specific guard steps.  The injection is *traced*: ``health.
+    guard_inner_step`` captures the installed hook at trace time and
+    weaves a ``jnp.where(step == k, poison, x)`` into the jitted step, so
+    the corrupted value flows through exactly the tensors a real overflow
+    would corrupt (loss, grad-norm, candidate update buffers).
+  * ``spike_scale_steps`` — multiply the (finite) loss by ``spike_scale``
+    at specific steps: a finite loss spike for the EMA z-score detector.
+  * ``truncate_npz_at`` — truncate ``arrays.npz`` at an arbitrary byte
+    offset during :func:`repro.train.checkpoint.save` (a torn write).
+  * ``raise_in_save`` — raise :class:`ChaosError` at a labeled point
+    inside ``save`` (see :data:`SAVE_SITES`): a crash/preemption mid-save.
+  * ``sigterm_at_step`` — deliver a real ``SIGTERM`` to this process at a
+    given trainer step (maintenance-event draining), exercising the
+    actual signal-handler path.
+
+The hook is module-global and monkeypatchable: ``install(ChaosHook(...))``
+/ ``uninstall()``, or the :func:`injected` context manager.  The
+``REPRO_CHAOS`` environment variable installs a hook at import time for
+CI legs (e.g. ``REPRO_CHAOS="nan@3,4,5;sigterm@9"``) — it is a TEST hook;
+production runs leave it unset and every injection point is a no-op.
+
+Nothing here imports the checkpoint or trainer modules (they import us),
+and no injection point costs anything when no hook is installed.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import signal
+from typing import Optional, Tuple
+
+SAVE_SITES = (
+    "save:pre_arrays",    # before arrays.npz is written
+    "save:post_arrays",   # arrays.npz written (and fsynced), no manifest yet
+    "save:pre_rename",    # tmp dir complete, publish rename not yet issued
+    "save:post_rename",   # published, GC not yet run
+)
+
+
+class ChaosError(RuntimeError):
+    """The injected mid-save crash (stands in for SIGKILL/power loss)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosHook:
+    """One deterministic fault schedule.  All fields default to inert."""
+    grad_nan_steps: Tuple[int, ...] = ()   # guard steps to poison
+    grad_mode: str = "nan"                 # 'nan' | 'inf'
+    spike_scale_steps: Tuple[int, ...] = ()  # guard steps to spike the loss
+    spike_scale: float = 1e4               # finite loss multiplier
+    truncate_npz_at: Optional[int] = None  # byte offset into arrays.npz
+    raise_in_save: Optional[str] = None    # one of SAVE_SITES
+    sigterm_at_step: Optional[int] = None  # trainer step to SIGTERM at
+    seed: int = 0                          # reserved for randomized modes
+
+    def poison(self) -> float:
+        return float("inf") if self.grad_mode == "inf" else float("nan")
+
+
+_HOOK: Optional[ChaosHook] = None
+
+
+def install(hook: ChaosHook) -> ChaosHook:
+    """Install ``hook`` as the process-wide fault schedule (tests)."""
+    global _HOOK
+    _HOOK = hook
+    return hook
+
+
+def uninstall() -> None:
+    global _HOOK
+    _HOOK = None
+
+
+def get() -> Optional[ChaosHook]:
+    """The installed hook, or None (the production answer)."""
+    return _HOOK
+
+
+@contextlib.contextmanager
+def injected(hook: ChaosHook):
+    """``with chaos.injected(ChaosHook(...)):`` — install for the block."""
+    install(hook)
+    try:
+        yield hook
+    finally:
+        uninstall()
+
+
+def from_env(spec: Optional[str] = None) -> Optional[ChaosHook]:
+    """Parse a ``REPRO_CHAOS`` spec: ``;``-separated ``kind@args`` terms.
+
+    ``nan@3,4`` / ``inf@7`` (poison grads), ``spike@5`` (finite loss
+    spike), ``truncate@128`` (byte offset), ``raise@save:pre_rename``,
+    ``sigterm@9``.  Unknown terms raise — a typo'd chaos spec silently
+    doing nothing would defeat the whole point of the leg.
+    """
+    spec = os.environ.get("REPRO_CHAOS", "") if spec is None else spec
+    spec = spec.strip()
+    if not spec:
+        return None
+    kw: dict = {}
+    for term in spec.split(";"):
+        term = term.strip()
+        if not term:
+            continue
+        kind, _, arg = term.partition("@")
+        if kind in ("nan", "inf"):
+            kw["grad_nan_steps"] = tuple(int(s) for s in arg.split(","))
+            kw["grad_mode"] = kind
+        elif kind == "spike":
+            kw["spike_scale_steps"] = tuple(int(s) for s in arg.split(","))
+        elif kind == "truncate":
+            kw["truncate_npz_at"] = int(arg)
+        elif kind == "raise":
+            if arg not in SAVE_SITES:
+                raise ValueError(f"REPRO_CHAOS raise site {arg!r} unknown; "
+                                 f"sites: {', '.join(SAVE_SITES)}")
+            kw["raise_in_save"] = arg
+        elif kind == "sigterm":
+            kw["sigterm_at_step"] = int(arg)
+        else:
+            raise ValueError(f"REPRO_CHAOS term {term!r} not understood")
+    return ChaosHook(**kw)
+
+
+# -- host-side injection points (all no-ops without a hook) -----------------
+
+def maybe_raise(site: str) -> None:
+    """Crash point inside ``checkpoint.save`` (``site`` in SAVE_SITES)."""
+    if _HOOK is not None and _HOOK.raise_in_save == site:
+        raise ChaosError(f"chaos: injected crash at {site}")
+
+
+def maybe_truncate(path: str) -> None:
+    """Torn-write point: truncate ``path`` at the hook's byte offset."""
+    if _HOOK is not None and _HOOK.truncate_npz_at is not None:
+        size = os.path.getsize(path)
+        os.truncate(path, max(0, min(_HOOK.truncate_npz_at, size)))
+
+
+def maybe_sigterm(step: int) -> None:
+    """Preemption point in the trainer loop: real SIGTERM to this pid."""
+    if _HOOK is not None and _HOOK.sigterm_at_step == step:
+        os.kill(os.getpid(), signal.SIGTERM)
+
+
+def flip_bit(path: str, byte_offset: int, bit: int = 0) -> None:
+    """Flip one bit of the file at ``path`` in place (silent media
+    corruption — the CRC manifest, not the guard, must catch this)."""
+    with open(path, "r+b") as f:
+        f.seek(byte_offset)
+        b = f.read(1)
+        f.seek(byte_offset)
+        f.write(bytes([b[0] ^ (1 << bit)]))
+        f.flush()
+        os.fsync(f.fileno())
+
+
+# REPRO_CHAOS is a test/CI hook: installs a schedule for the whole process
+# at import time.  Production runs never set it.
+_env_hook = from_env()
+if _env_hook is not None:
+    install(_env_hook)

@@ -26,6 +26,7 @@ import json
 import os
 import re
 import shutil
+import zipfile
 import zlib
 from typing import Any, Optional
 
@@ -33,7 +34,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import chaos
+
 SEP = "||"
+
+
+class MethodMismatchError(ValueError):
+    """Cross-method resume refusal — a CONFIG error, never corruption:
+    :func:`restore_latest` must propagate it instead of quarantining."""
+
+
+# What a torn/corrupt checkpoint surfaces as: truncated zips raise
+# BadZipFile/EOFError/OSError, torn npy members raise ValueError inside
+# numpy, a torn manifest raises JSONDecodeError, CRC/shape drift raises
+# IOError (== OSError), a missing key raises KeyError.  restore_latest
+# treats all of these as "this checkpoint is damaged — quarantine and walk
+# back"; anything else (a real bug, MethodMismatchError) propagates.
+CORRUPTION_ERRORS = (OSError, EOFError, KeyError, ValueError,
+                     zlib.error, zipfile.BadZipFile, json.JSONDecodeError)
 
 
 def _undo_void(arr: np.ndarray, key: str, manifest: dict,
@@ -222,16 +240,51 @@ def _migrate_legacy_grouped_params(npz, manifest: dict, template: Any) -> dict:
     return migrated
 
 
+def _fsync_file(path: str) -> None:
+    """Flush a written file's data to stable storage (read-only fd is
+    enough for fsync on POSIX)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a DIRECTORY: the rename/create entries themselves are
+    directory data — without this a crash can publish a name whose
+    contents never hit the disk (the torn-checkpoint failure mode)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass  # some filesystems refuse dir fsync; best-effort there
+    finally:
+        os.close(fd)
+
+
 def save(workdir: str, step: int, tree: Any, *, keep: int = 3,
          extra: Optional[dict] = None) -> str:
+    """Durable step-atomic save: arrays.npz is written AND fsynced before
+    the manifest (so a published manifest never describes unwritten
+    arrays), the tmp dir is fsynced before the rename, and the workdir is
+    fsynced after it.  GC runs strictly AFTER the publish rename — a
+    crash at any point leaves every previously published checkpoint
+    intact.  ``chaos.maybe_*`` calls are the fault-injection points of
+    tests/test_resilience.py (no-ops in production)."""
     os.makedirs(workdir, exist_ok=True)
     final = os.path.join(workdir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
+    chaos.maybe_raise("save:pre_arrays")
     flat = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **flat)
+    chaos.maybe_truncate(npz_path)
+    _fsync_file(npz_path)
+    chaos.maybe_raise("save:post_arrays")
     manifest = {
         "step": int(step),
         "crc": {k: zlib.crc32(v.tobytes()) for k, v in flat.items()},
@@ -245,21 +298,56 @@ def save(workdir: str, step: int, tree: Any, *, keep: int = 3,
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    chaos.maybe_raise("save:pre_rename")
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic publish
+        # Never rmtree a PUBLISHED checkpoint before its replacement is
+        # live: move it aside under a .tmp suffix (invisible to all_steps,
+        # reaped by the stale-tmp sweep) and drop it only after the rename.
+        aside = final + ".replaced.tmp"
+        if os.path.exists(aside):
+            shutil.rmtree(aside)
+        os.rename(final, aside)
+        os.rename(tmp, final)  # atomic publish
+        shutil.rmtree(aside, ignore_errors=True)
+    else:
+        os.rename(tmp, final)  # atomic publish
+    _fsync_dir(workdir)
+    chaos.maybe_raise("save:post_rename")
     _gc(workdir, keep)
     return final
 
 
 def _gc(workdir: str, keep: int):
+    """Keep-last-k reaper.  Runs only after a successful publish (see
+    :func:`save`) and only over PUBLISHED steps (``all_steps`` ignores
+    ``.tmp``/``.corrupt`` entries), so a concurrent or just-failed save's
+    work dir is never collected.  ``keep=0`` means keep ALL."""
     steps = all_steps(workdir)
-    for s in steps[:-keep] if keep else []:
+    for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(workdir, f"step_{s:08d}"),
                       ignore_errors=True)
 
 
+def clean_stale_tmp(workdir: str) -> list:
+    """Delete ``step_*.tmp`` / ``step_*.replaced.tmp`` left by crashed
+    saves (previously they accumulated forever).  Returns removed names.
+    Quarantined ``.corrupt`` dirs are NOT touched — they are evidence."""
+    removed = []
+    if not os.path.isdir(workdir):
+        return removed
+    for name in os.listdir(workdir):
+        if re.fullmatch(r"step_\d+(\.replaced)?\.tmp", name):
+            shutil.rmtree(os.path.join(workdir, name), ignore_errors=True)
+            removed.append(name)
+    return removed
+
+
 def all_steps(workdir: str):
+    """Published step numbers, sorted.  ``step_*.tmp`` (in-flight or
+    crashed saves) and ``step_*.corrupt`` (quarantined) never match the
+    strict ``step_<digits>`` pattern, so they are invisible here — and
+    therefore invisible to GC and restore."""
     if not os.path.isdir(workdir):
         return []
     out = []
@@ -296,7 +384,7 @@ def restore(workdir: str, step: int, template: Any,
     saved_method = (manifest.get("extra") or {}).get("method")
     if (expect_method is not None and saved_method is not None
             and saved_method != expect_method):
-        raise ValueError(
+        raise MethodMismatchError(
             f"cross-method resume refused: checkpoint at step {step} was "
             f"written by method {saved_method!r}, this run uses "
             f"{expect_method!r}.  Method states are not interchangeable — "
@@ -337,10 +425,40 @@ def restore(workdir: str, step: int, template: Any,
     return tree, manifest
 
 
+def quarantine(workdir: str, step: int) -> str:
+    """Move a damaged checkpoint aside as ``step_XXXX.corrupt`` — never
+    deleted: it is evidence (and possibly partially recoverable by hand).
+    A pre-existing quarantine of the same step is replaced."""
+    src = os.path.join(workdir, f"step_{step:08d}")
+    dst = src + ".corrupt"
+    if os.path.exists(dst):
+        shutil.rmtree(dst)
+    os.rename(src, dst)
+    return dst
+
+
 def restore_latest(workdir: str, template: Any, shardings: Any = None,
                    expect_method: Optional[str] = None):
-    step = latest_step(workdir)
-    if step is None:
-        return None, None
-    return restore(workdir, step, template, shardings,
-                   expect_method=expect_method)
+    """Restore the NEWEST INTACT checkpoint, walking back past damage.
+
+    A CRC failure, truncated archive, torn manifest or missing leaf in the
+    newest checkpoint quarantines it (``step_*.corrupt`` — renamed, not
+    deleted) and falls back to the next-newest, until an intact step
+    restores or none remain (then ``(None, None)``, a fresh start).
+    Stale ``*.tmp`` dirs from crashed saves are reaped on entry.
+    :class:`MethodMismatchError` still propagates — a cross-method resume
+    is a config error, and quarantining valid checkpoints for it would
+    destroy good state.
+    """
+    clean_stale_tmp(workdir)
+    for step in reversed(all_steps(workdir)):
+        try:
+            return restore(workdir, step, template, shardings,
+                           expect_method=expect_method)
+        except MethodMismatchError:
+            raise
+        except CORRUPTION_ERRORS as e:
+            dst = quarantine(workdir, step)
+            print(f"[checkpoint] step {step} failed to restore "
+                  f"({type(e).__name__}: {e}); quarantined to {dst}")
+    return None, None
