@@ -42,6 +42,12 @@ GATED = {
 # both sides of the ratio are computed analytically in the SAME run)
 MIN_BF16_BYTES_REDUCTION = 0.35
 
+# the quantized-state profile (int8 m/v + per-block scales + bf16 SR
+# masters) must remove at least this fraction of the inner step's
+# roofline-derived OPTIMIZER-STATE bytes vs the fp32-state baseline
+# (both sides computed analytically in the same run)
+MIN_INT8_STATE_BYTES_REDUCTION = 0.50
+
 # the traced health guard (non-finite + spike detection + lax.cond skip)
 # must stay ~free on the hot path: guarded/raw inner-step ms, both timed
 # in the SAME run (host-independent), may not exceed 1 + this fraction
@@ -119,6 +125,50 @@ def check_dtype_bytes(fresh: dict) -> list[str]:
     return failures
 
 
+def check_state_bytes(fresh: dict) -> list[str]:
+    """Quantized-state gate: every timed section must carry state-dtype
+    provenance, and the roofline-derived int8 optimizer-state profile must
+    access at least MIN_INT8_STATE_BYTES_REDUCTION fewer state bytes than
+    the fp32-state baseline (analytical, same run, host-independent)."""
+    failures = []
+    for section in ("train_step", "grouped_state"):
+        if fresh.get(section, {}).get("state_dtype") is None:
+            failures.append(
+                f"{section}: no 'state_dtype' provenance tag in fresh run")
+        else:
+            print(f"[ok] {section}: optimizer state stored at state_dtype="
+                  f"{fresh[section]['state_dtype']!r} (masters "
+                  f"{fresh[section].get('master_dtype')!r})")
+    sb = fresh.get("train_step", {}).get("state_bytes_by_dtype")
+    if not sb:
+        failures.append(
+            "train_step: state_bytes_by_dtype missing from fresh run "
+            "(kernel_bench must record the int8-vs-fp32 optimizer-state "
+            "bytes columns)"
+        )
+        return failures
+    red = sb.get("reduction") or 0.0
+    i8_mib = sb.get("int8", 0.0) / 2**20
+    f32_mib = sb.get("float32", 0.0) / 2**20
+    pct = red * 100.0
+    floor_pct = MIN_INT8_STATE_BYTES_REDUCTION * 100.0
+    status = "FAIL" if red < MIN_INT8_STATE_BYTES_REDUCTION else "ok"
+    prof = sb.get("int8_profile") or {}
+    print(
+        f"[{status}] optimizer-state bytes: int8 profile {i8_mib:.2f} MiB "
+        f"vs f32 {f32_mib:.2f} MiB -> {pct:.1f}% reduction (floor "
+        f"{floor_pct:.0f}%; profile state_dtype="
+        f"{prof.get('state_dtype')!r}, master_dtype="
+        f"{prof.get('master_dtype')!r}, block {prof.get('state_block')})"
+    )
+    if status == "FAIL":
+        failures.append(
+            f"int8 state profile removes only {pct:.1f}% of optimizer-"
+            f"state HBM bytes (< {floor_pct:.0f}% floor)"
+        )
+    return failures
+
+
 def check_guard_overhead(fresh: dict) -> list[str]:
     """Resilience gate (baseline-free): the health-guarded inner step vs
     the raw inner step, both timed in the same run on the same route.
@@ -144,6 +194,7 @@ def check_guard_overhead(fresh: dict) -> list[str]:
 def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     failures = check_methods_registry(fresh)
     failures += check_dtype_bytes(fresh)
+    failures += check_state_bytes(fresh)
     failures += check_guard_overhead(fresh)
     base_g = baseline.get("grouped_state", {})
     fresh_g = fresh.get("grouped_state", {})

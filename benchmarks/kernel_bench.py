@@ -172,6 +172,19 @@ def bench_train_step() -> dict:
     bytes_f32 = roofline.lowrank_inner_step_bytes(groups, tokens, "f32")
     bytes_bf16 = roofline.lowrank_inner_step_bytes(groups, tokens, "bf16")
 
+    # Optimizer-state traffic under the state_dtype/master_dtype knobs:
+    # fp32-state baseline vs the profile REPRO_STATE_DTYPE=int8 ships
+    # (int8 m/v payloads + per-block fp32 scales + stochastically rounded
+    # bf16 B masters).  int8 moments with fp32 masters land at ~49.5%
+    # (below the floor) — the quantized profile pairs both knobs.  The
+    # >= 50% state-bytes floor in check_regression.py gates this record.
+    state_f32 = roofline.lowrank_inner_step_bytes(
+        groups, tokens, "bf16", state_dtype="float32",
+        master_dtype="float32")
+    state_i8 = roofline.lowrank_inner_step_bytes(
+        groups, tokens, "bf16", state_dtype="int8",
+        master_dtype="bfloat16")
+
     def run():
         p, o, metr = step(params, opt, batch)
         return metr["loss"]
@@ -210,6 +223,9 @@ def bench_train_step() -> dict:
             "method": method.name,
             # provenance: the compute dtype the timed step actually ran at
             "compute_dtype": opt.layout.compute_dtype,
+            # provenance: how the timed step stored its optimizer state
+            "state_dtype": opt.layout.state_dtype,
+            "master_dtype": opt.layout.master_dtype,
             "inner_step_xla_ms": xla_ms,
             "inner_step_dispatch_ms": routed_ms,
             # health-guarded step on the same route: the skip-step guard
@@ -221,6 +237,20 @@ def bench_train_step() -> dict:
                 "bf16_breakdown": bytes_bf16["by_dtype"],
                 # fraction of HBM traffic the bf16 hot path removes
                 "reduction": 1.0 - bytes_bf16["bytes"] / bytes_f32["bytes"],
+            },
+            # roofline-derived optimizer-state bytes (B + moments + scales)
+            # of one inner step: fp32-state baseline vs the int8 profile
+            "state_bytes_by_dtype": {
+                "float32": state_f32["state_bytes"],
+                "int8": state_i8["state_bytes"],
+                "int8_profile": {
+                    "state_dtype": state_i8["state_dtype"],
+                    "master_dtype": state_i8["master_dtype"],
+                    "state_block": state_i8["state_block"],
+                },
+                # fraction of state traffic the int8+bf16 profile removes
+                "reduction":
+                    1.0 - state_i8["state_bytes"] / state_f32["state_bytes"],
             }}
 
 
@@ -321,6 +351,9 @@ def bench_grouped_state() -> dict:
         # provenance: the grouped inner/outer ratio gate only compares
         # same-dtype runs (check_regression skips on a tag mismatch)
         "compute_dtype": state.layout.compute_dtype,
+        # provenance: how this section's state was stored
+        "state_dtype": state.layout.state_dtype,
+        "master_dtype": state.layout.master_dtype,
         "n_groups": len(state.groups),
         "n_lowrank_leaves": sum(len(s.leaf_idx)
                                 for s in state.layout.groups),

@@ -218,10 +218,22 @@ def _operand_terms(op: str, m: int, k: int, n: int, r: int):
                    ("delta", 2 * k * n), ("w", 2 * k * n)]
     elif op == "subspace_adam":
         flops = 10 * n * r
-        # one round-trip of 4-in/3-out (b/m/v read+write, g read once)
-        fused = [("state", 6 * n * r), ("g", n * r)]
+        # one round-trip of 4-in/3-out, split by storage class so per-dtype
+        # accounting can price them separately: the B master (read+write)
+        # vs the m/v moments (each read+write); g read once.
+        fused = [("b", 2 * n * r), ("moments", 4 * n * r), ("g", n * r)]
         # ~10 elementwise HBM passes with intermediates round-tripping
-        unfused = [("state", 14 * n * r), ("g", 2 * n * r)]
+        # (b re-read by the delta add; m/v round-trip their own updates
+        # plus the bias-corrected intermediates)
+        unfused = [("b", 4 * n * r), ("moments", 10 * n * r),
+                   ("g", 2 * n * r)]
+    elif op == "subspace_lion":
+        flops = 7 * n * r
+        # momentum-only: b and m round-trip, g read once
+        fused = [("b", 2 * n * r), ("moments", 2 * n * r), ("g", n * r)]
+        # unfused: u = sign(...) materialises, m round-trips its update
+        unfused = [("b", 4 * n * r), ("moments", 5 * n * r),
+                   ("g", 2 * n * r)]
     else:
         raise ValueError(op)
     return flops, fused, unfused
@@ -234,14 +246,20 @@ def _operand_dtypes(op: str, stream: str) -> dict:
     Adam *gradient* is fp32 too: it IS dB — the backward writes it fp32
     and autodiff casts the packed-B cotangent back up to the fp32 master,
     so no bf16 g-stream ever exists in the hot path."""
-    f32_always = {"db", "delta", "state", "g"}
+    f32_always = {"db", "delta", "g"}
     names = {
         "lowrank_forward": ("x", "w", "v", "b", "y", "p"),
         "lowrank_backward": ("dy", "w", "v", "b", "p", "q", "dx", "db"),
         "lowrank_merge": ("w", "v", "b", "delta"),
-        "subspace_adam": ("state", "g"),
+        "subspace_adam": ("b", "moments", "g"),
+        "subspace_lion": ("b", "moments", "g"),
     }[op]
-    return {o: ("f32" if o in f32_always else stream) for o in names}
+    dt = {o: ("f32" if o in f32_always else stream) for o in names}
+    if op in ("subspace_adam", "subspace_lion"):
+        # optimizer state defaults: fp32 masters/moments regardless of the
+        # streaming dtype (overridden by state_dtype/master_dtype knobs)
+        dt["b"] = dt["moments"] = "f32"
+    return dt
 
 
 def lowrank_kernel_entry(op: str, m: int, k: int, n: int, r: int,
@@ -291,27 +309,51 @@ def lowrank_kernel_entry(op: str, m: int, k: int, n: int, r: int,
     }
 
 
+# knob-name -> HLO dtype name for the optimizer-state roofline terms
+_STATE_DTYPE_NAME = {"float32": "f32", "f32": "f32",
+                     "int8": "s8", "s8": "s8"}
+_MASTER_DTYPE_NAME = {"float32": "f32", "f32": "f32",
+                      "bfloat16": "bf16", "bf16": "bf16"}
+
+
 def lowrank_inner_step_bytes(groups, tokens: int,
-                             compute_dtype: str = "bf16") -> dict:
+                             compute_dtype: str = "bf16",
+                             state_dtype: str = "float32",
+                             master_dtype: str = "float32",
+                             state_block: int = 128,
+                             algo: str = "adam") -> dict:
     """Roofline-derived HBM bytes of ONE grouped inner training step.
 
     ``groups``: iterable of ``(k, n, r, members)`` — one entry per
     low-rank group (``members`` = stacked leaves); ``tokens``: flattened
     batch*seq token count feeding each matmul.  Sums the fused forward +
-    fused backward per member plus the group's batched subspace-Adam, with
-    streamed operands in ``compute_dtype`` and dB / Adam state fp32 (the
-    kernel contract).  Host-independent by construction — this is the
-    quantity the bench's bf16-vs-fp32 bytes gate compares.
+    fused backward per member plus the group's batched subspace update
+    (``algo`` = ``"adam"`` or ``"lion"``), with streamed operands in
+    ``compute_dtype`` and dB fp32 (the kernel contract).  Host-independent
+    by construction — this is the quantity the bench's bytes gates compare.
+
+    ``state_dtype`` prices the moment traffic: ``"int8"`` counts 1 byte
+    per element plus one fp32 absmax scale per ``state_block`` elements
+    (the fused dequant/requant round-trip touches payload AND scales).
+    ``master_dtype`` prices the B master stream (``"bfloat16"`` halves
+    it).  The returned ``state_bytes`` isolates the optimizer-state
+    traffic (B + moments + scales) — the quantity the int8 regression
+    gate compares against its fp32-state baseline.
     """
-    total, by_dt = 0.0, {}
+    sdt = _STATE_DTYPE_NAME[state_dtype]
+    mdt = _MASTER_DTYPE_NAME[master_dtype]
+    sub_op = "subspace_lion" if algo == "lion" else "subspace_adam"
+    total, by_dt, state_bytes = 0.0, {}, 0.0
+
+    def _add(name, b):
+        by_dt[name] = by_dt.get(name, 0.0) + b
+
     for (k, n, r, members) in groups:
-        for op, rows in (("lowrank_forward", None),
-                         ("lowrank_backward", None),
-                         ("subspace_adam", members * n)):
-            if op == "subspace_adam":
-                e = lowrank_kernel_entry(op, 0, 0, rows, r,
-                                         dtypes=_operand_dtypes(
-                                             op, compute_dtype))
+        for op in ("lowrank_forward", "lowrank_backward", sub_op):
+            if op == sub_op:
+                dt = _operand_dtypes(op, compute_dtype)
+                dt["b"], dt["moments"] = mdt, sdt
+                e = lowrank_kernel_entry(op, 0, 0, members * n, r, dtypes=dt)
                 mult = 1
             else:
                 e = lowrank_kernel_entry(op, tokens, k, n, r,
@@ -320,9 +362,23 @@ def lowrank_inner_step_bytes(groups, tokens: int,
                 mult = members
             total += mult * e["bytes_fused"]
             for name, b in e["bytes_by_dtype"]["fused"].items():
-                by_dt[name] = by_dt.get(name, 0.0) + mult * b
-    return {"bytes": total, "by_dtype": by_dt,
-            "compute_dtype": compute_dtype, "tokens": tokens}
+                _add(name, mult * b)
+            if op == sub_op:
+                fused = dict(_operand_terms(op, 0, 0, members * n, r)[1])
+                b_bytes = fused["b"] * _DTYPE_BYTES[mdt]
+                mo_bytes = fused["moments"] * _DTYPE_BYTES[sdt]
+                scale_bytes = 0.0
+                if sdt == "s8":
+                    # one fp32 scale rides each state_block-element block
+                    # of every moment read/write the kernel performs
+                    scale_bytes = fused["moments"] / state_block * 4.0
+                    total += scale_bytes
+                    _add("f32", scale_bytes)
+                state_bytes += b_bytes + mo_bytes + scale_bytes
+    return {"bytes": total, "by_dtype": by_dt, "state_bytes": state_bytes,
+            "compute_dtype": compute_dtype, "state_dtype": state_dtype,
+            "master_dtype": master_dtype, "state_block": int(state_block),
+            "algo": algo, "tokens": tokens}
 
 
 def roofline_terms(record: dict, cfg=None, shape=None) -> dict:

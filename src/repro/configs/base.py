@@ -183,6 +183,14 @@ class TrainConfig:
     compute_dtype: str = "auto"       # hot-path compute: 'auto' (bf16 on
                                       # TPU/GPU, fp32 on CPU) | 'bfloat16' |
                                       # 'float32'; masters/moments stay fp32
+    state_dtype: str = "float32"      # grouped subspace m/v storage:
+                                      # 'float32' | 'int8' (block-quantized,
+                                      # per-128-elt absmax scales; dequant->
+                                      # update->requant fused in the kernels)
+    master_dtype: str = "float32"     # subspace B master storage: 'float32'
+                                      # | 'bfloat16' (stochastically rounded
+                                      # updates, unbiased, keyed from the
+                                      # step's PRNG)
 
     # --- resilience (train/health.py + Trainer escalation) ---
     health_guard: bool = True         # traced non-finite/spike skip guard

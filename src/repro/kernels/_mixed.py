@@ -19,3 +19,18 @@ def dotf(a: jax.Array, b: jax.Array) -> jax.Array:
         dt = jnp.promote_types(a.dtype, b.dtype)
         a, b = a.astype(dt), b.astype(dt)
     return jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def sr_bf16(x: jax.Array, bits: jax.Array) -> jax.Array:
+    """Stochastically round fp32 ``x`` to bf16 using ``bits``.
+
+    ``bits`` is uint32 uniform over [0, 2**16): adding it to the fp32 bit
+    pattern and truncating the low 16 mantissa bits rounds up with
+    probability equal to the dropped fraction — unbiased in expectation,
+    unlike round-to-nearest whose per-element bias accumulates over
+    thousands of master updates.  Works identically inside Pallas kernel
+    bodies (element-wise bit ops only) and in the XLA refs.
+    """
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    u = (u + bits.astype(jnp.uint32)) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(u, jnp.float32).astype(jnp.bfloat16)

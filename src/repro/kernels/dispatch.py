@@ -60,9 +60,13 @@ from ._mixed import dotf as _dot32
 from .lowrank_backward import lowrank_backward as _pl_backward
 from .lowrank_forward import lowrank_forward as _pl_forward
 from .lowrank_update import lowrank_merge as _pl_merge
+from .lowrank_update import lowrank_merge_sr as _pl_merge_sr
 from .lowrank_update import lowrank_project as _pl_project
 from .ops import _interpret
 from .subspace_adam import subspace_adam as _pl_adam
+from .subspace_adam import subspace_adam_q8 as _pl_adam_q8
+from .subspace_adam import subspace_lion as _pl_lion
+from .subspace_adam import subspace_lion_q8 as _pl_lion_q8
 
 Array = jax.Array
 
@@ -97,13 +101,30 @@ def _blocks(M: int, N: int, K: Optional[int] = None):
 # Route selection (dtype-aware VMEM estimates)
 # ---------------------------------------------------------------------------
 
-def _sizes(dtypes: Sequence, n: int, itemsize: int) -> Tuple[int, ...]:
-    """Per-operand itemsizes from real dtypes; ``itemsize`` fallback."""
+def _itemsize(d) -> float:
+    """Effective bytes/element of one operand descriptor.
+
+    A plain dtype sizes as itself.  A block-quantized operand is
+    described as ``(payload_dtype, block)`` — e.g. ``("int8", 128)`` —
+    and sizes as the int8 payload plus one fp32 scale per ``block``
+    elements (1.03125 B/elt at block 128), NOT the 4-byte fp32 fallback:
+    without this the VMEM guard over-counts int8 workloads ~4x and
+    spuriously kicks them off the Pallas route at larger shapes (the
+    same class of bug the PR 5 bf16 itemsize fix addressed).
+    """
+    if isinstance(d, tuple):
+        payload, block = d
+        return jnp.dtype(payload).itemsize + 4.0 / float(block)
+    return float(jnp.dtype(d).itemsize)
+
+
+def _sizes(dtypes: Sequence, n: int, itemsize: int) -> Tuple[float, ...]:
+    """Per-operand effective itemsizes; ``itemsize`` fallback."""
     if dtypes:
-        out = tuple(jnp.dtype(d).itemsize for d in dtypes)
+        out = tuple(_itemsize(d) for d in dtypes)
         if len(out) == n:
             return out
-    return (itemsize,) * n
+    return (float(itemsize),) * n
 
 
 def _bwd_vmem_bytes(M: int, K: int, N: int, r: int, sizes) -> int:
@@ -345,6 +366,79 @@ def _pallas_adam(b2, g2, m2, v2, *, lr, step, beta1, beta2, eps, wd):
     return tuple(o[:rows] for o in outs)
 
 
+def _pallas_lion(b2, g2, m2, *, lr, beta1, beta2, wd):
+    rows, r = b2.shape
+    blk = min(256, _round_up(rows, SUBLANE))
+    rp = _round_up(rows, blk)
+    itp = _interpret()
+    fn = _cached_kernel(
+        "subspace_lion",
+        ((rp, r), _dt_names(b2, g2, m2), blk, (beta1, beta2, wd), itp),
+        lambda: (lambda bp, gp, mp, lr_: _pl_lion(
+            bp, gp, mp, lr=lr_, beta1=beta1, beta2=beta2, wd=wd,
+            block=blk, interpret=itp)))
+    padded = [_pad2(a, rp, r) for a in (b2, g2, m2)]
+    outs = fn(*padded, lr)
+    return tuple(o[:rows] for o in outs)
+
+
+def _pallas_adam_q8(b2, g2, mq, ms, vq, vs, bits, *, lr, step,
+                    beta1, beta2, eps, wd):
+    R, L = b2.shape
+    blk = min(256, _round_up(R, SUBLANE))
+    rp = _round_up(R, blk)
+    itp = _interpret()
+    sr = bits is not None
+    fn = _cached_kernel(
+        "subspace_adam_q8",
+        ((rp, L), _dt_names(b2, g2, mq, vq), blk,
+         (beta1, beta2, eps, wd), sr, itp),
+        lambda: (lambda bp, gp, mqp, msp, vqp, vsp, bitsp, lr_, step_:
+                 _pl_adam_q8(bp, gp, mqp, msp, vqp, vsp, lr=lr_,
+                             step=step_, beta1=beta1, beta2=beta2,
+                             eps=eps, wd=wd, bits=bitsp, block=blk,
+                             interpret=itp)))
+    outs = fn(_pad2(b2, rp, L), _pad2(g2, rp, L), _pad2(mq, rp, L),
+              _pad2(ms, rp, 1), _pad2(vq, rp, L), _pad2(vs, rp, 1),
+              _pad2(bits, rp, L) if sr else None, lr, step)
+    return tuple(o[:R] for o in outs)
+
+
+def _pallas_lion_q8(b2, g2, mq, ms, bits, *, lr, beta1, beta2, wd):
+    R, L = b2.shape
+    blk = min(256, _round_up(R, SUBLANE))
+    rp = _round_up(R, blk)
+    itp = _interpret()
+    sr = bits is not None
+    fn = _cached_kernel(
+        "subspace_lion_q8",
+        ((rp, L), _dt_names(b2, g2, mq), blk, (beta1, beta2, wd), sr, itp),
+        lambda: (lambda bp, gp, mqp, msp, bitsp, lr_:
+                 _pl_lion_q8(bp, gp, mqp, msp, lr=lr_, beta1=beta1,
+                             beta2=beta2, wd=wd, bits=bitsp, block=blk,
+                             interpret=itp)))
+    outs = fn(_pad2(b2, rp, L), _pad2(g2, rp, L), _pad2(mq, rp, L),
+              _pad2(ms, rp, 1), _pad2(bits, rp, L) if sr else None, lr)
+    return tuple(o[:R] for o in outs)
+
+
+def _pallas_merge_sr(w: Array, v: Array, b: Array, bits: Array) -> Array:
+    K, N = w.shape
+    r = v.shape[1]
+    bk = min(256, _round_up(K, SUBLANE))
+    bn = min(256, _round_up(N, LANE))
+    Kp, Np = _round_up(K, bk), _round_up(N, bn)
+    itp = _interpret()
+    fn = _cached_kernel(
+        "lowrank_merge_sr",
+        ((Kp, Np, r), _dt_names(w, v, b), (bk, bn), itp),
+        lambda: (lambda wp, vp, bp, bitsp: _pl_merge_sr(
+            wp, vp, bp, bitsp, bk=bk, bn=bn, interpret=itp)))
+    out = fn(_pad2(w, Kp, Np), _pad2(v, Kp, r), _pad2(b, Np, r),
+             _pad2(bits, Kp, Np))
+    return out[:K, :N]
+
+
 # ---------------------------------------------------------------------------
 # XLA impls (the unfused reference schedule, fp32 accumulation)
 # ---------------------------------------------------------------------------
@@ -372,13 +466,35 @@ def _xla_adam(b2, g2, m2, v2, *, lr, step, beta1, beta2, eps, wd):
                              eps=eps, wd=wd, step=step)
 
 
+def _xla_lion(b2, g2, m2, *, lr, beta1, beta2, wd):
+    return ref.subspace_lion(b2, g2, m2, lr=lr, beta1=beta1, beta2=beta2,
+                             wd=wd)
+
+
+def _xla_adam_q8(b2, g2, mq, ms, vq, vs, bits, *, lr, step,
+                 beta1, beta2, eps, wd):
+    return ref.subspace_adam_q8(b2, g2, mq, ms, vq, vs, lr=lr, beta1=beta1,
+                                beta2=beta2, eps=eps, wd=wd, step=step,
+                                bits=bits)
+
+
+def _xla_lion_q8(b2, g2, mq, ms, bits, *, lr, beta1, beta2, wd):
+    return ref.subspace_lion_q8(b2, g2, mq, ms, lr=lr, beta1=beta1,
+                                beta2=beta2, wd=wd, bits=bits)
+
+
 TABLE = {
     "lowrank_forward": {"pallas": _pallas_forward, "xla": _xla_forward},
     "lowrank_backward": {"pallas": _pallas_backward, "xla": _xla_backward},
     "lowrank_merge": {"pallas": _pallas_merge, "xla": ref.lowrank_merge},
+    "lowrank_merge_sr": {"pallas": _pallas_merge_sr,
+                         "xla": ref.lowrank_merge_sr},
     "lowrank_project": {"pallas": _pallas_project,
                         "xla": ref.lowrank_project},
     "subspace_adam": {"pallas": _pallas_adam, "xla": _xla_adam},
+    "subspace_adam_q8": {"pallas": _pallas_adam_q8, "xla": _xla_adam_q8},
+    "subspace_lion": {"pallas": _pallas_lion, "xla": _xla_lion},
+    "subspace_lion_q8": {"pallas": _pallas_lion_q8, "xla": _xla_lion_q8},
 }
 
 
@@ -452,6 +568,22 @@ def lowrank_project(g: Array, v: Array) -> Array:
     return fn(g, v)
 
 
+def lowrank_merge_sr(w: Array, v: Array, b: Array, bits: Array) -> Array:
+    """W + V B^T stochastically rounded into w's reduced dtype.
+
+    Same contract as :func:`lowrank_merge` plus ``bits`` (w-shaped uint32
+    uniform over [0, 2**16)) feeding the unbiased round — used when the
+    stored master weights are bf16 so the once-per-K merge does not
+    accumulate round-to-nearest bias across outer cycles.
+    """
+    impl = TABLE["lowrank_merge_sr"][route(
+        "lowrank_merge_sr", dtypes=(w.dtype, v.dtype, b.dtype))]
+    fn = impl
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w, v, b, bits)
+
+
 def subspace_adam(b: Array, g: Array, m: Array, v: Array, *, lr, step,
                   beta1: float = 0.9, beta2: float = 0.999,
                   eps: float = 1e-8, wd: float = 0.0,
@@ -486,3 +618,105 @@ def subspace_adam(b: Array, g: Array, m: Array, v: Array, *, lr, step,
     if plan is not None and not plan.is_noop:
         nb, nm, nv = (_rank_unpack(o, plan) for o in (nb, nm, nv))
     return nb.reshape(shape), nm.reshape(shape), nv.reshape(shape)
+
+
+def subspace_lion(b: Array, g: Array, m: Array, *, lr,
+                  beta1: float = 0.9, beta2: float = 0.99,
+                  wd: float = 0.0, pack: Optional[PackSpec] = None):
+    """Fused momentum-only Lion on stacked subspace variables.
+
+    Same shape/packing contract as :func:`subspace_adam` minus the second
+    moment: b/m (..., n, r) fp32, g any compute dtype.  Returns (b', m').
+    """
+    shape = b.shape
+    r = shape[-1]
+    flat = [a.reshape(-1, r) for a in (b, g, m)]
+    rt = route("subspace_lion", dtypes=(b.dtype, g.dtype, m.dtype))
+    impl = TABLE["subspace_lion"][rt]
+    plan = None
+    if rt == "pallas":
+        plan = pack if pack is not None else rank_pack_plan(
+            flat[0].shape[0], r)
+        if plan.rows != flat[0].shape[0] or plan.r != r:
+            plan = rank_pack_plan(flat[0].shape[0], r)
+        flat = [_rank_pack(a, plan) for a in flat]
+    nb, nm = impl(*flat, lr=lr, beta1=beta1, beta2=beta2, wd=wd)
+    if plan is not None and not plan.is_noop:
+        nb, nm = (_rank_unpack(o, plan) for o in (nb, nm))
+    return nb.reshape(shape), nm.reshape(shape)
+
+
+# --- int8 block-quantized state --------------------------------------------
+#
+# Quantized state replaces rank packing with an even simpler lane layout:
+# the WHOLE flattened buffer is tiled into (R, qblock) rows — one
+# quantization block per 128-lane row (qblock defaults to LANE), trivially
+# lane-aligned for any rank.  The public wrappers take LOGICAL shapes
+# (b/g/mq/vq match the state's (..., n, r); ms/vs are the flat (R,) scale
+# vectors quant.quantize produces) and own the tiling both ways.
+
+def _to_blocks(a: Array, R: int, L: int) -> Array:
+    flat = a.reshape(-1)
+    pad = R * L - flat.shape[0]
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(R, L)
+
+
+def subspace_adam_q8(b: Array, g: Array, mq: Array, ms: Array,
+                     vq: Array, vs: Array, *, lr, step,
+                     beta1: float = 0.9, beta2: float = 0.999,
+                     eps: float = 1e-8, wd: float = 0.0,
+                     qblock: int = LANE, bits: Optional[Array] = None):
+    """Fused Adam with int8 block-quantized moments.
+
+    b/g/mq/vq share the logical state shape (..., n, r) — b the fp32 or
+    bf16 master, g any compute dtype, mq/vq int8; ms/vs are (R,) fp32
+    absmax scales (R = ceil(size / qblock)).  ``bits`` (b-shaped uint32)
+    enables fused stochastic rounding of b' into b.dtype.  The dequant ->
+    fp32 update -> requant round-trip runs inside the kernel, so the fp32
+    moments exist only in VMEM.  Returns (b', mq', ms', vq', vs').
+    """
+    shape = b.shape
+    size = b.size
+    R = max(1, -(-size // qblock))
+    rt = route("subspace_adam_q8",
+               dtypes=(b.dtype, g.dtype, ("int8", qblock),
+                       ("int8", qblock)))
+    impl = TABLE["subspace_adam_q8"][rt]
+    nb, nmq, nms, nvq, nvs = impl(
+        _to_blocks(b, R, qblock), _to_blocks(g, R, qblock),
+        _to_blocks(mq, R, qblock), ms.reshape(R, 1),
+        _to_blocks(vq, R, qblock), vs.reshape(R, 1),
+        _to_blocks(bits, R, qblock) if bits is not None else None,
+        lr=lr, step=step, beta1=beta1, beta2=beta2, eps=eps, wd=wd)
+
+    def unflat(a):
+        return a.reshape(-1)[:size].reshape(shape)
+
+    return (unflat(nb), unflat(nmq), nms.reshape(R),
+            unflat(nvq), nvs.reshape(R))
+
+
+def subspace_lion_q8(b: Array, g: Array, mq: Array, ms: Array, *, lr,
+                     beta1: float = 0.9, beta2: float = 0.99,
+                     wd: float = 0.0, qblock: int = LANE,
+                     bits: Optional[Array] = None):
+    """Fused Lion with int8 block-quantized momentum — the
+    :func:`subspace_adam_q8` contract minus v.  Returns (b', mq', ms')."""
+    shape = b.shape
+    size = b.size
+    R = max(1, -(-size // qblock))
+    rt = route("subspace_lion_q8",
+               dtypes=(b.dtype, g.dtype, ("int8", qblock)))
+    impl = TABLE["subspace_lion_q8"][rt]
+    nb, nmq, nms = impl(
+        _to_blocks(b, R, qblock), _to_blocks(g, R, qblock),
+        _to_blocks(mq, R, qblock), ms.reshape(R, 1),
+        _to_blocks(bits, R, qblock) if bits is not None else None,
+        lr=lr, beta1=beta1, beta2=beta2, wd=wd)
+
+    def unflat(a):
+        return a.reshape(-1)[:size].reshape(shape)
+
+    return unflat(nb), unflat(nmq), nms.reshape(R)

@@ -21,6 +21,7 @@ from jax.experimental.pallas import tpu as pltpu
 # bf16 V draws meet the fp32 B master in the merge and the lift — all
 # dots go through the shared promote-in-VMEM helper
 from ._mixed import dotf as _dotf
+from ._mixed import sr_bf16 as _sr_bf16
 
 Array = jax.Array
 
@@ -53,6 +54,42 @@ def lowrank_merge(w: Array, v: Array, b: Array, *, bk: int = 256,
         out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
         interpret=interpret,
     )(w, v, b)
+
+
+# ---------------------------------------------------------------------------
+# W + V B^T with stochastic rounding (reduced-precision masters)
+# ---------------------------------------------------------------------------
+
+def _merge_sr_kernel(w_ref, v_ref, b_ref, bits_ref, o_ref):
+    delta = _dotf(v_ref[...], b_ref[...].T)
+    acc = w_ref[...].astype(jnp.float32) + delta
+    o_ref[...] = _sr_bf16(acc, bits_ref[...]).astype(o_ref.dtype)
+
+
+def lowrank_merge_sr(w: Array, v: Array, b: Array, bits: Array, *,
+                     bk: int = 256, bn: int = 256,
+                     interpret: bool = False) -> Array:
+    """w (K,N) + v (K,r) @ b (N,r)^T, stochastically rounded into w's
+    (reduced) dtype: ``bits`` (K,N) uint32 uniform over [0, 2**16)
+    supplies the rounding noise, so the merge is unbiased to rounding
+    even when the stored masters are bf16."""
+    K, N = w.shape
+    r = v.shape[1]
+    bk, bn = min(bk, K), min(bn, N)
+    assert K % bk == 0 and N % bn == 0
+    return pl.pallas_call(
+        _merge_sr_kernel,
+        grid=(K // bk, N // bn),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
+        interpret=interpret,
+    )(w, v, b, bits)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,38 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ._mixed import sr_bf16
+
 Array = jax.Array
+
+
+def _requant(x: Array):
+    """Per-row absmax int8 requantization over the 128-lane block axis —
+    the oracle for the in-VMEM requant the q8 kernels perform."""
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def _requant_sqrt(x: Array):
+    """sqrt-codec requant (second moments: ~127^2 dynamic range)."""
+    return _requant(jnp.sqrt(jnp.maximum(x, 0.0)))
+
+
+def _deq(q: Array, s: Array) -> Array:
+    return q.astype(jnp.float32) * s
+
+
+def _deq_sqrt(q: Array, s: Array) -> Array:
+    y = q.astype(jnp.float32) * s
+    return y * y
+
+
+def _round_b(b_new: Array, bits, dtype):
+    if bits is not None:
+        return sr_bf16(b_new, bits).astype(dtype)
+    return b_new.astype(dtype)
 
 
 def lowrank_forward(x: Array, w: Array, v: Array, b: Array) -> Array:
@@ -52,6 +83,53 @@ def subspace_adam(b, g, m, v, *, lr, beta1, beta2, eps, wd, step):
     bc2 = 1.0 - beta2 ** step
     delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) + wd * b
     return b - lr * delta, m2, v2
+
+
+def subspace_lion(b, g, m, *, lr, beta1, beta2, wd):
+    """Momentum-only Lion on the subspace variable B (fp32 state)."""
+    g = g.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    m = m.astype(jnp.float32)
+    u = jnp.sign(beta1 * m + (1 - beta1) * g)
+    return b - lr * (u + wd * b), beta2 * m + (1 - beta2) * g
+
+
+def subspace_adam_q8(b, g, mq, ms, vq, vs, *, lr, beta1, beta2, eps, wd,
+                     step, bits=None):
+    """int8-state Adam over the (R, 128) block layout — the ground truth
+    for the fused dequant/update/requant kernel.  mq/vq (R,128) int8,
+    ms/vs (R,1) fp32 scales; m is linear-codec, v sqrt-codec; b fp32 or
+    bf16 master (b' keeps b.dtype, stochastically rounded when ``bits``
+    is given)."""
+    g = g.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    m2 = beta1 * _deq(mq, ms) + (1 - beta1) * g
+    v2 = beta2 * _deq_sqrt(vq, vs) + (1 - beta2) * g * g
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+    delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps) + wd * bf
+    b2 = _round_b(bf - lr * delta, bits, b.dtype)
+    mq2, ms2 = _requant(m2)
+    vq2, vs2 = _requant_sqrt(v2)
+    return b2, mq2, ms2, vq2, vs2
+
+
+def subspace_lion_q8(b, g, mq, ms, *, lr, beta1, beta2, wd, bits=None):
+    """int8-momentum Lion over the (R, 128) block layout."""
+    g = g.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    m = _deq(mq, ms)
+    u = jnp.sign(beta1 * m + (1 - beta1) * g)
+    b2 = _round_b(bf - lr * (u + wd * bf), bits, b.dtype)
+    mq2, ms2 = _requant(beta2 * m + (1 - beta2) * g)
+    return b2, mq2, ms2
+
+
+def lowrank_merge_sr(w, v, b, bits):
+    """W + V B^T stochastically rounded into w.dtype (bf16 masters)."""
+    acc = (w.astype(jnp.float32) +
+           v.astype(jnp.float32) @ b.astype(jnp.float32).T)
+    return sr_bf16(acc, bits).astype(w.dtype)
 
 
 def ssd_intra_chunk(x, dt, da, bmat, cmat):

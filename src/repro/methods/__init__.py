@@ -20,4 +20,4 @@ from .base import Method  # noqa: F401
 from .registry import available, get, register  # noqa: F401
 
 # importing the implementation modules runs their @register decorators
-from . import adamw, galore, lowrank  # noqa: E402,F401
+from . import adamw, galore, lion, lowrank  # noqa: E402,F401

@@ -164,6 +164,50 @@ def resolve_compute_dtype(tcfg=None) -> jnp.dtype:
     return DTYPES[name]
 
 
+STATE_DTYPES = ("float32", "int8")
+MASTER_DTYPES = ("float32", "bfloat16")
+
+
+def resolve_state_dtype(tcfg=None) -> str:
+    """Storage dtype NAME for the grouped subspace m/v moments:
+    ``'float32'`` (dense fp32 buffers) or ``'int8'`` (block-quantized,
+    dequant->update->requant fused in the kernels).  Resolution order:
+    ``REPRO_STATE_DTYPE`` env override, then ``tcfg.state_dtype``.
+    Returned as a string — int8 state is a (payload, scales) pair, not a
+    jnp dtype."""
+    import os
+
+    name = os.environ.get("REPRO_STATE_DTYPE") or (
+        getattr(tcfg, "state_dtype", "float32") if tcfg is not None
+        else "float32")
+    if name in ("", "auto"):
+        name = "float32"
+    if name not in STATE_DTYPES:
+        raise ValueError(
+            f"state_dtype {name!r}: expected one of "
+            f"{', '.join(STATE_DTYPES)}")
+    return name
+
+
+def resolve_master_dtype(tcfg=None) -> str:
+    """Storage dtype NAME for the subspace B masters: ``'float32'`` or
+    ``'bfloat16'`` (updates stochastically rounded so the narrow store
+    stays unbiased).  ``REPRO_MASTER_DTYPE`` env override, then
+    ``tcfg.master_dtype``."""
+    import os
+
+    name = os.environ.get("REPRO_MASTER_DTYPE") or (
+        getattr(tcfg, "master_dtype", "float32") if tcfg is not None
+        else "float32")
+    if name in ("", "auto"):
+        name = "float32"
+    if name not in MASTER_DTYPES:
+        raise ValueError(
+            f"master_dtype {name!r}: expected one of "
+            f"{', '.join(MASTER_DTYPES)}")
+    return name
+
+
 def compute_view(tree, cdt):
     """Reduced-precision read view of a weight tree for the loss/backprop.
 

@@ -36,9 +36,15 @@ Array = jax.Array
 
 def init(params, tcfg, key: Array) -> SubspaceState:
     """Same grouped slot layout as LowRankLazyAdam; V starts as zeros (the
-    first refresh fills it from the first gradient's SVD)."""
+    first refresh fills it from the first gradient's SVD).
+
+    GaLore opts OUT of quantized/narrow optimizer state
+    (``quantize_state=False``): its moment math below runs in plain XLA on
+    the logical fp32 views, not through the fused dequant-in-VMEM q8
+    kernels, so ``state_dtype``/``master_dtype`` would buy nothing here and
+    the slots stay fp32 regardless of the knobs."""
     from . import subspace
-    state = subspace.init(params, tcfg, key)
+    state = subspace.init(params, tcfg, key, quantize_state=False)
     groups = tuple(g._replace(proj=jnp.zeros_like(g.proj))
                    for g in state.groups)
     return dataclasses.replace(state, groups=groups)

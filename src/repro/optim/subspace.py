@@ -76,8 +76,11 @@ import jax.numpy as jnp
 
 from ..core import samplers
 from ..kernels import dispatch, ref
-from ..models.common import DTYPES, resolve_compute_dtype
+from ..kernels._mixed import sr_bf16
+from ..models.common import (DTYPES, resolve_compute_dtype,
+                             resolve_master_dtype, resolve_state_dtype)
 from ..models.linear import LRPack
+from . import quant
 from .adamw import clip_by_global_norm
 
 Array = jax.Array
@@ -108,14 +111,21 @@ class GroupedLowRankSlot(NamedTuple):
     """All same-shape low-rank leaves of one group, pre-stacked.
 
     ``proj``: (G,) + lead + (k, r); ``b``/``m``/``v``: (G,) + lead +
-    (n_out, r) fp32; ``energy``: (G, k) fp32 (or (G, 0) when the sampler
+    (n_out, r); ``energy``: (G, k) fp32 (or (G, 0) when the sampler
     carries no energy EMA).  Axis 0 indexes group members in the order of
     the layout's ``leaf_idx``.
+
+    Storage dtypes follow the layout: ``b`` is fp32 or (``master_dtype=
+    "bfloat16"``, stochastically-rounded updates) bf16; ``m``/``v`` are
+    fp32 arrays or (``state_dtype="int8"``) block-quantized
+    :class:`repro.optim.quant.QuantizedTensor` nodes.  Under the
+    momentum-only lion algorithm ``v`` is a zero-size ``(G,)+lead+(0, r)``
+    placeholder (rank-consistent so sharding pspecs stay uniform).
     """
     proj: Array
     b: Array
-    m: Array
-    v: Array
+    m: Any
+    v: Any
     energy: Array
 
 
@@ -142,6 +152,12 @@ class SubspaceLayout(NamedTuple):
     groups: Tuple[GroupSpec, ...]
     compute_dtype: str = "float32"
     packs: Tuple[dispatch.PackSpec, ...] = ()
+    # storage precision of the grouped optimizer state (new fields carry
+    # defaults so pre-existing layouts/pickles keep their meaning):
+    state_dtype: str = "float32"    # m/v moments: 'float32' | 'int8'
+    master_dtype: str = "float32"   # B masters:   'float32' | 'bfloat16'
+    qblock: int = quant.QBLOCK      # elements per int8 absmax scale block
+    algo: str = "adam"              # subspace update rule: 'adam' | 'lion'
 
 
 @functools.partial(
@@ -221,12 +237,22 @@ def _pack_for(spec: GroupSpec) -> dispatch.PackSpec:
     return dispatch.rank_pack_plan(rows, spec.rank)
 
 
-def build_layout(params, tcfg) -> SubspaceLayout:
+def build_layout(params, tcfg, algo: str = "adam",
+                 quantize_state: bool = True) -> SubspaceLayout:
     """Classify leaves once; same-shape/same-rank low-rank leaves share a
     group.  Pure Python over shapes — safe under jax.eval_shape.  The
     layout also pins the run's compute dtype (resolved from
-    ``tcfg.compute_dtype`` / REPRO_COMPUTE_DTYPE / the backend) and each
-    group's rank-packing plan."""
+    ``tcfg.compute_dtype`` / REPRO_COMPUTE_DTYPE / the backend), the
+    optimizer-state storage precision (``tcfg.state_dtype`` /
+    REPRO_STATE_DTYPE and ``tcfg.master_dtype`` / REPRO_MASTER_DTYPE),
+    the update rule (``algo``) and each group's rank-packing plan.
+
+    ``quantize_state=False`` pins fp32 storage regardless of the
+    ``state_dtype`` / ``master_dtype`` knobs — the opt-out for paradigms
+    (GaLore) whose moment math runs in plain XLA rather than through the
+    fused dequant-in-VMEM q8 kernels."""
+    if algo not in ("adam", "lion"):
+        raise ValueError(f"algo {algo!r}: expected 'adam' or 'lion'")
     leaves = jax.tree_util.tree_flatten_with_path(params_of(params))[0]
     dense_idx = []
     by_sig: dict = {}
@@ -242,7 +268,12 @@ def build_layout(params, tcfg) -> SubspaceLayout:
     cdt = jnp.dtype(resolve_compute_dtype(tcfg)).name
     return SubspaceLayout(n_leaves=len(leaves), dense_idx=tuple(dense_idx),
                           groups=groups, compute_dtype=cdt,
-                          packs=tuple(_pack_for(s) for s in groups))
+                          packs=tuple(_pack_for(s) for s in groups),
+                          state_dtype=(resolve_state_dtype(tcfg)
+                                       if quantize_state else "float32"),
+                          master_dtype=(resolve_master_dtype(tcfg)
+                                        if quantize_state else "float32"),
+                          qblock=quant.QBLOCK, algo=algo)
 
 
 # ---------------------------------------------------------------------------
@@ -302,12 +333,31 @@ def _sample_proj_group(name, key, spec: GroupSpec, n_members: int, c,
     return v.reshape((n_members,) + lead + (k_dim, spec.rank))
 
 
-def init(params, tcfg, key: Array) -> SubspaceState:
+def _moment_zeros(shape, layout: SubspaceLayout, codec: str = "linear"):
+    """A zeroed grouped moment buffer in the layout's storage precision.
+    Second moments use the sqrt codec (see :mod:`repro.optim.quant`)."""
+    if layout.state_dtype == "int8":
+        return quant.zeros(shape, layout.qblock, codec=codec)
+    return jnp.zeros(shape, jnp.float32)
+
+
+def init(params, tcfg, key: Array, algo: str = "adam",
+         quantize_state: bool = True) -> SubspaceState:
     """Classify leaves, build the grouped layout, sample initial
-    projections (one batched draw per group), zero moments."""
+    projections (one batched draw per group), zero moments.
+
+    Storage precision follows the layout: ``state_dtype="int8"`` makes the
+    grouped m/v :class:`repro.optim.quant.QuantizedTensor` nodes,
+    ``master_dtype="bfloat16"`` stores B narrow (updates stochastically
+    rounded).  ``algo="lion"`` keeps only the first moment — v becomes a
+    zero-size ``(G,)+lead+(0, r)`` placeholder.  Dense (non-grouped)
+    slots stay plain fp32 either way: they are norm scales and biases,
+    not the footprint."""
     params = params_of(params)
-    layout = build_layout(params, tcfg)
+    layout = build_layout(params, tcfg, algo=algo,
+                          quantize_state=quantize_state)
     cdt = DTYPES[layout.compute_dtype]
+    mdt = DTYPES[layout.master_dtype]
     flat_p = jax.tree.leaves(params)
     keys = jax.random.split(key, len(layout.groups) + 1)
     dense = tuple(
@@ -327,10 +377,15 @@ def init(params, tcfg, key: Array) -> SubspaceState:
         # storage costs one rounding, never an accumulated drift.
         proj = _sample_proj_group(tcfg.sampler, keys[g], spec, n_members,
                                   tcfg.c, energy, dtype=cdt)
-        b = jnp.zeros((n_members,) + lead + (n_out, spec.rank), jnp.float32)
+        bshape = (n_members,) + lead + (n_out, spec.rank)
+        b = jnp.zeros(bshape, mdt)
+        m = _moment_zeros(bshape, layout)
+        if layout.algo == "lion":
+            v = jnp.zeros((n_members,) + lead + (0, spec.rank), jnp.float32)
+        else:
+            v = _moment_zeros(bshape, layout, codec="sqrt")
         groups.append(GroupedLowRankSlot(
-            proj=proj, b=b, m=jnp.zeros_like(b), v=jnp.zeros_like(b),
-            energy=energy))
+            proj=proj, b=b, m=m, v=v, energy=energy))
     return SubspaceState(dense=dense, groups=tuple(groups),
                          step=jnp.zeros((), jnp.int32),
                          outer_step=jnp.zeros((), jnp.int32),
@@ -377,14 +432,14 @@ def params_of(params):
     return jax.tree.unflatten(params.treedef, out)
 
 
-def init_grouped(params, tcfg, key: Array):
+def init_grouped(params, tcfg, key: Array, algo: str = "adam"):
     """One-call trainer entry: classify leaves, build the grouped state AND
     the grouped master weights from the same layout.
 
     Returns ``(grouped_params, state)`` — the canonical in-training
     representation pair (both structure-of-arrays, both donatable).
     """
-    state = init(params, tcfg, key)
+    state = init(params, tcfg, key, algo=algo)
     return group_params(params, state.layout), state
 
 
@@ -453,9 +508,12 @@ def leaf_slots(state: SubspaceState) -> list:
         out[i] = state.dense[di]
     for g, spec in enumerate(state.layout.groups):
         slot = state.groups[g]
+        # quantized moments dequantize to their logical fp32 view here —
+        # introspection sees values, not (payload, scale) pairs
+        m, v = quant.as_f32(slot.m), quant.as_f32(slot.v)
         for j, i in enumerate(spec.leaf_idx):
             out[i] = LowRankSlot(proj=slot.proj[j], b=slot.b[j],
-                                 m=slot.m[j], v=slot.v[j],
+                                 m=m[j], v=v[j],
                                  energy=slot.energy[j])
     return out
 
@@ -495,6 +553,27 @@ def _dense_adam(slot: DenseSlot, p, g, *, lr, bc1, bc2, tcfg):
     return new_p, DenseSlot(m, v)
 
 
+def _dense_lion(slot: DenseSlot, p, g, *, lr, tcfg):
+    """Momentum-only Lion on a dense leaf.  The v buffer rides along
+    zeroed (dense leaves are norm scales/biases — keeping the slot shape
+    uniform costs nothing and keeps pspecs/checkpoints method-agnostic)."""
+    g32 = g.astype(jnp.float32)
+    u = jnp.sign(tcfg.beta1 * slot.m + (1 - tcfg.beta1) * g32)
+    if tcfg.weight_decay and p.ndim >= 2:
+        u = u + tcfg.weight_decay * p.astype(jnp.float32)
+    new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+    m = tcfg.beta2 * slot.m + (1 - tcfg.beta2) * g32
+    return new_p, DenseSlot(m, slot.v)
+
+
+def _sr_bits(key, step, gi: int, shape):
+    """Per-(step, group) uint16-in-uint32 rounding noise for bf16 master
+    updates — keyed from the state's PRNG so every draw is fresh and the
+    jitted step stays deterministic given (key, step)."""
+    k = jax.random.fold_in(jax.random.fold_in(key, step), gi)
+    return jax.random.bits(k, shape, jnp.uint32) >> 16
+
+
 def inner_update(grads: Trainable, trainable: Trainable, params,
                  state: SubspaceState, *, lr,
                  tcfg) -> Tuple[Any, Trainable, SubspaceState, Array]:
@@ -522,12 +601,20 @@ def inner_update(grads: Trainable, trainable: Trainable, params,
         flat_p, pdef = jax.tree.flatten(params)
         dense_w = tuple(flat_p[i] for i in state.layout.dense_idx)
 
-    # -- dense leaves: plain AdamW math (XLA fuses the elementwise chain) --
+    layout = state.layout
+    lion = layout.algo == "lion"
+    q8 = layout.state_dtype == "int8"
+    sr = layout.master_dtype == "bfloat16"
+
+    # -- dense leaves: plain elementwise math (XLA fuses the chain) --------
     new_dense_w, new_dense = [], []
     for di, w in enumerate(dense_w):
-        new_p, slot = _dense_adam(state.dense[di], w,
-                                  grads.dense[di], lr=lr, bc1=bc1, bc2=bc2,
-                                  tcfg=tcfg)
+        if lion:
+            new_p, slot = _dense_lion(state.dense[di], w, grads.dense[di],
+                                      lr=lr, tcfg=tcfg)
+        else:
+            new_p, slot = _dense_adam(state.dense[di], w, grads.dense[di],
+                                      lr=lr, bc1=bc1, bc2=bc2, tcfg=tcfg)
         new_dense_w.append(new_p)
         new_dense.append(slot)
 
@@ -536,14 +623,50 @@ def inner_update(grads: Trainable, trainable: Trainable, params,
     # inside the subspace we decay B directly (equivalent to decaying the
     # increment — standard in GaLore-style training).
     new_groups, new_tgroups = [], []
-    packs = state.layout.packs
+    packs = layout.packs
     for gi, (slot, g) in enumerate(zip(state.groups, grads.groups)):
         g32 = g.astype(jnp.float32)
-        nb, nm, nv = dispatch.subspace_adam(
-            slot.b, g32, slot.m, slot.v, lr=lr, step=stepf,
-            beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
-            wd=float(tcfg.weight_decay),
-            pack=packs[gi] if gi < len(packs) else None)
+        bits = (_sr_bits(state.key, state.step, gi, slot.b.shape)
+                if sr else None)
+        if q8:
+            # fused dequant -> fp32 update -> requant: the int8 payload +
+            # scales are all that moves; SR of b' fuses in when masters
+            # are bf16
+            if lion:
+                nb, nmq, nms = dispatch.subspace_lion_q8(
+                    slot.b, g32, slot.m.q, slot.m.scale, lr=lr,
+                    beta1=tcfg.beta1, beta2=tcfg.beta2,
+                    wd=float(tcfg.weight_decay), qblock=layout.qblock,
+                    bits=bits)
+                nm = quant.QuantizedTensor(nmq, nms, layout.qblock)
+                nv = slot.v
+            else:
+                nb, nmq, nms, nvq, nvs = dispatch.subspace_adam_q8(
+                    slot.b, g32, slot.m.q, slot.m.scale,
+                    slot.v.q, slot.v.scale, lr=lr, step=stepf,
+                    beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+                    wd=float(tcfg.weight_decay), qblock=layout.qblock,
+                    bits=bits)
+                nm = quant.QuantizedTensor(nmq, nms, layout.qblock)
+                nv = quant.QuantizedTensor(nvq, nvs, layout.qblock,
+                                           codec="sqrt")
+        else:
+            # fp32-state kernels output fp32 b'; SR (if any) applies to
+            # the store, outside the kernel
+            if lion:
+                nb, nm = dispatch.subspace_lion(
+                    slot.b, g32, slot.m, lr=lr, beta1=tcfg.beta1,
+                    beta2=tcfg.beta2, wd=float(tcfg.weight_decay),
+                    pack=packs[gi] if gi < len(packs) else None)
+                nv = slot.v
+            else:
+                nb, nm, nv = dispatch.subspace_adam(
+                    slot.b, g32, slot.m, slot.v, lr=lr, step=stepf,
+                    beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+                    wd=float(tcfg.weight_decay),
+                    pack=packs[gi] if gi < len(packs) else None)
+            if sr:
+                nb = sr_bf16(nb, bits).astype(slot.b.dtype)
         new_groups.append(GroupedLowRankSlot(
             proj=slot.proj, b=nb, m=nm, v=nv,
             energy=_group_energy_update(slot, g32)))
@@ -590,11 +713,18 @@ def outer_merge_resample(params, state: SubspaceState, tcfg):
         flat_p, pdef = jax.tree.flatten(params)
         new_flat_p = list(flat_p)
     gkeys = jax.random.split(skey, max(len(state.groups), 1))
+    sr_master = state.layout.master_dtype == "bfloat16"
     new_wgroups, new_groups = [], []
     for g, (spec, slot) in enumerate(zip(state.layout.groups, state.groups)):
         ws = params.groups[g] if grouped else \
             jnp.stack([flat_p[i] for i in spec.leaf_idx])
-        merged = dispatch.lowrank_merge(ws, slot.proj, slot.b)
+        if sr_master and jnp.dtype(ws.dtype) == jnp.bfloat16:
+            # merging into narrow stored weights: stochastic rounding
+            # keeps the once-per-K accumulate unbiased across outer cycles
+            mbits = _sr_bits(skey, state.outer_step, g, ws.shape)
+            merged = dispatch.lowrank_merge_sr(ws, slot.proj, slot.b, mbits)
+        else:
+            merged = dispatch.lowrank_merge(ws, slot.proj, slot.b)
         if grouped:
             new_wgroups.append(merged)
         else:
@@ -605,7 +735,7 @@ def outer_merge_resample(params, state: SubspaceState, tcfg):
                                   dtype=slot.proj.dtype)
         b = jnp.zeros_like(slot.b)
         if tcfg.reset_moments:
-            m, v = jnp.zeros_like(b), jnp.zeros_like(b)
+            m, v = quant.zeros_like(slot.m), quant.zeros_like(slot.v)
         else:
             m, v = slot.m, slot.v  # beyond-paper: carry moments across V
         new_groups.append(GroupedLowRankSlot(proj=proj, b=b, m=m, v=v,

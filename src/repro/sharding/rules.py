@@ -20,7 +20,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.common import ParamSpec
-from ..optim import subspace
+from ..optim import quant, subspace
 
 # logical axis -> preferred mesh axis (None = replicate)
 LOGICAL_TO_MESH = {
@@ -161,8 +161,21 @@ def state_pspecs(mesh: Mesh, specs, state) -> Any:
         v_k = None if v_bytes < 64 * 2**20 else k_ax
         proj = P(*([None] + lead + [v_k, None]))
         b = P(*([None] + lead + [n_ax, None]))
+
+        # moments follow B's sharding; int8-quantized moments are a
+        # (payload, scale) pytree node — the payload keeps the logical
+        # shape (so B's pspec applies verbatim) and the flat per-block
+        # scale vector is replicated (its blocks cross member/axis
+        # boundaries; at ~1/128 of the payload it is not worth sharding)
+        def _moment_pspec(x, b_ps=b):
+            if isinstance(x, quant.QuantizedTensor):
+                return quant.QuantizedTensor(q=b_ps, scale=P(None),
+                                             block=x.block, codec=x.codec)
+            return b_ps
+
         groups.append(subspace.GroupedLowRankSlot(
-            proj=proj, b=b, m=b, v=b, energy=P(None, None)))
+            proj=proj, b=b, m=_moment_pspec(slot.m),
+            v=_moment_pspec(slot.v), energy=P(None, None)))
     return subspace.SubspaceState(
         dense=dense, groups=tuple(groups), step=P(), outer_step=P(),
         key=P(), layout=state.layout)

@@ -240,6 +240,68 @@ def _migrate_legacy_grouped_params(npz, manifest: dict, template: Any) -> dict:
     return migrated
 
 
+def _quant_tags(tree) -> dict:
+    """``{flat-key-prefix: [block, codec]}`` for every ``QuantizedTensor``
+    node in ``tree``.  Recorded in the manifest because the int8 payload
+    alone does not identify its value mapping: restoring an int8-state
+    archive into an fp32-state template needs the codec to decode each
+    (q, scale) pair back to real values."""
+    from ..optim import quant  # lazy: checkpointing stays model-agnostic
+    nodes = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=quant.is_quantized)[0]
+    return {
+        SEP.join(_key_str(p) for p in path): [int(node.block), node.codec]
+        for path, node in nodes if quant.is_quantized(node)}
+
+
+def _migrate_state_dtype(npz, manifest: dict, template: Any) -> dict:
+    """Loader-side fp32 <-> int8 optimizer-state migration (both ways).
+
+    A checkpoint written at one ``state_dtype`` restores into a template
+    built at the other: a plain fp32 moment record is block-quantized into
+    the template's ``(q, scale)`` leaves using the template node's
+    block/codec, and a saved ``(q, scale)`` pair is dequantized into a
+    plain fp32 leaf using the manifest's ``quant`` tags.  Source records
+    are CRC-checked here (the migrated keys have no manifest entry of
+    their own).  Returns ``{template_key: np.ndarray}`` — empty when
+    archive and template agree on the state dtype.
+    """
+    from ..optim import quant  # lazy: checkpointing stays model-agnostic
+    keys = set(npz.files)
+
+    def _checked(k):
+        arr = npz[k]
+        if zlib.crc32(arr.tobytes()) != manifest["crc"].get(k):
+            raise IOError(f"checkpoint corruption at leaf {k!r}")
+        return _undo_void(arr, k, manifest)
+
+    migrated: dict = {}
+    qtags = manifest.get("quant") or {}
+    nodes = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=quant.is_quantized)[0]
+    for path, node in nodes:
+        key = SEP.join(_key_str(p) for p in path)
+        if quant.is_quantized(node):
+            # fp32 archive -> int8 template: quantize on load
+            if key not in keys or key + SEP + "q" in keys:
+                continue
+            qt = quant.quantize(jnp.asarray(_checked(key), jnp.float32),
+                                block=node.block, codec=node.codec)
+            migrated[key + SEP + "q"] = np.asarray(qt.q)
+            migrated[key + SEP + "scale"] = np.asarray(qt.scale)
+        else:
+            # int8 archive -> fp32 template: dequantize on load
+            if key in keys or key + SEP + "q" not in keys:
+                continue
+            tag = qtags.get(key) or [quant.QBLOCK, "linear"]
+            qt = quant.QuantizedTensor(
+                q=jnp.asarray(_checked(key + SEP + "q")),
+                scale=jnp.asarray(_checked(key + SEP + "scale")),
+                block=int(tag[0]), codec=str(tag[1]))
+            migrated[key] = np.asarray(quant.dequantize(qt))
+    return migrated
+
+
 def _fsync_file(path: str) -> None:
     """Flush a written file's data to stable storage (read-only fd is
     enough for fsync on POSIX)."""
@@ -292,6 +354,9 @@ def save(workdir: str, step: int, tree: Any, *, keep: int = 3,
         # dtype provenance: lets restore re-view non-native dtypes
         # (bfloat16) and makes precision drift auditable across resumes
         "dtypes": {k: v.dtype.name for k, v in flat.items()},
+        # quantized-leaf provenance: block/codec per QuantizedTensor node,
+        # required to decode an int8-state archive into an fp32 template
+        "quant": _quant_tags(tree),
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -394,6 +459,7 @@ def restore(workdir: str, step: int, template: Any,
     saved_keys = set(npz.files)
     migrated = _migrate_legacy_subspace(npz, manifest, template)
     migrated.update(_migrate_legacy_grouped_params(npz, manifest, template))
+    migrated.update(_migrate_state_dtype(npz, manifest, template))
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     flat_s = (treedef.flatten_up_to(shardings)
               if shardings is not None else [None] * len(flat_t))

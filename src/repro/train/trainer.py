@@ -38,7 +38,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig, TrainConfig
 from ..models import encdec, lm
-from ..models.common import resolve_compute_dtype
+from ..models.common import (resolve_compute_dtype, resolve_master_dtype,
+                             resolve_state_dtype)
 from ..optim import subspace
 from .. import methods
 from . import chaos
@@ -92,6 +93,8 @@ class Trainer:
         # Restore casts leaves into the template's dtypes, so an fp32
         # checkpoint resumes cleanly into a bf16 run and vice versa.
         self.compute_dtype = np.dtype(resolve_compute_dtype(tcfg)).name
+        self.state_dtype = resolve_state_dtype(tcfg)
+        self.master_dtype = resolve_master_dtype(tcfg)
 
         model = encdec if cfg.is_encoder_decoder else lm
         key = jax.random.key(tcfg.seed)
@@ -203,6 +206,8 @@ class Trainer:
         extra = {"arch": self.cfg.name,
                  "method": self.method.checkpoint_tag,
                  "compute_dtype": self.compute_dtype,
+                 "state_dtype": self.state_dtype,
+                 "master_dtype": self.master_dtype,
                  "health": self._health_extra()}
         if preempted:
             extra["preempted"] = True

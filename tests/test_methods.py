@@ -30,7 +30,7 @@ CFG = get_config("llama-tiny")
 
 # per-method knobs that make 3 smoke steps meaningful on llama-tiny
 _LR = {"adamw": 1e-3, "lowrank_adam": 3e-3, "galore": 1e-3,
-       "lowrank_lr": 1e-4}
+       "lowrank_lr": 1e-4, "lowrank_lion": 3e-4}
 
 
 def _tcfg(name, **kw):
