@@ -22,6 +22,21 @@ from typing import Dict, Optional
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link (assignment: ~50 GB/s/link)
+HBM_BYTES = 16 * 2**30       # HBM capacity per chip (v5e: 16 GiB)
+
+
+def state_fits(per_device_state_bytes: int,
+               headroom: float = 0.6) -> bool:
+    """Does the resident training state leave room for activations?
+
+    ``per_device_state_bytes`` is the summed analytic footprint from
+    ``sharding.rules.lowrank_shard_report`` (masters + every optimizer
+    buffer under its pspec).  ``headroom`` caps state at that fraction of
+    :data:`HBM_BYTES` — the rest is activations, temps and XLA slack.
+    Used by the dry-run tables to flag cells whose G-sharding is the
+    difference between fitting and not.
+    """
+    return per_device_state_bytes <= headroom * HBM_BYTES
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,

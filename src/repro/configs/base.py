@@ -166,6 +166,11 @@ class TrainConfig:
     rank: int = 128                   # projection rank r
     c: float = 1.0                    # weak-unbiasedness scale
     lazy_k: int = 200                 # inner steps per projection (paper: 200/50)
+    fuse_outer: bool = False          # fold the outer merge+resample into the
+                                      # inner step as a traced lax.cond on
+                                      # step % lazy_k (one jitted program, no
+                                      # dispatch gap at the cadence boundary;
+                                      # the GaLore refresh uses the same shape)
     lr: float = 1e-3
     schedule: str = "cosine"          # 'cosine' | 'constant'
     lowrank_exclude: str = r"(/embed/|/tok$|/pos$|router|conv_w)"

@@ -230,57 +230,57 @@ def dependent_diagonal(key: Array, diag_energy: Array, r: int, c: float = 1.0,
 # The grouped optimizer state stores every same-shape projection stacked as
 # one (batch, n, r) array, so resampling at the outer step is ONE call here
 # instead of a Python loop over leaves with jax.random.split(key, n_leaves).
+#
+# Shard locality contract: every batched sampler is the vmap of its
+# single-draw form over a per-row key split, so
+#
+#     batched(key, batch, ...)[g] == single(jax.random.split(key, batch)[g])
+#
+# bit-exactly.  Row g depends ONLY on keys[g] (and, for dependent_diag, on
+# energy row g), never on another row — under a G-sharded layout GSPMD
+# partitions the draw along the batch axis and each device generates its
+# local G-shard of V in place: no all-gather of V, no replicated QR.  The
+# contract is what tests/test_sampler_sharding.py asserts per sampler.
 
 def gaussian_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,
                      dtype: jnp.dtype = jnp.float32) -> Array:
-    """(batch, n, r) of independent Gaussian projections in one draw
-    (fp32 draw, one cast — see :func:`gaussian`)."""
-    v = jnp.sqrt(c / r) * jax.random.normal(key, (batch, n, r),
-                                            dtype=jnp.float32)
-    return v.astype(dtype)
+    """(batch, n, r) of independent Gaussian projections: vmapped
+    single-key draws (fp32 draw, one cast — see :func:`gaussian`)."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(
+        lambda kk: gaussian(kk, n, r, c=c, dtype=dtype))(keys)
 
 
 def stiefel_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,
                     dtype: jnp.dtype = jnp.float32) -> Array:
-    """Haar-Stiefel (Algorithm 2) for a whole group: ONE batched thin QR
-    over (batch, n, r) instead of per-leaf QR calls."""
-    g = jax.random.normal(key, (batch, n, r), dtype=jnp.float32)
-    q, rmat = jnp.linalg.qr(g, mode="reduced")
-    d = jnp.sign(jnp.diagonal(rmat, axis1=-2, axis2=-1))   # (batch, r)
-    d = jnp.where(d == 0, 1.0, d)
-    u = q * d[..., None, :]
-    alpha = jnp.sqrt(c * n / r)
-    return (alpha * u).astype(dtype)
+    """Haar-Stiefel (Algorithm 2) for a whole group: the thin QR still
+    lowers batched (vmap of qr is a batched qr), but each row's Gaussian
+    comes from its own key so the draw shards along the batch axis."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(
+        lambda kk: stiefel(kk, n, r, c=c, dtype=dtype))(keys)
 
 
 def coordinate_batched(key: Array, batch: int, n: int, r: int, c: float = 1.0,
                        dtype: jnp.dtype = jnp.float32) -> Array:
-    """Coordinate sampler (Algorithm 3) batched: one argsort over
-    (batch, n) uniforms, one scatter to build every selection matrix."""
-    perm = jnp.argsort(jax.random.uniform(key, (batch, n)), axis=-1)
-    idx = perm[:, :r]                                      # (batch, r)
-    alpha = jnp.asarray(jnp.sqrt(c * n / r), dtype)
-    rows = jnp.arange(batch)[:, None]
-    cols = jnp.arange(r)[None, :]
-    return jnp.zeros((batch, n, r), dtype).at[rows, idx, cols].set(alpha)
+    """Coordinate sampler (Algorithm 3) batched: per-row argsort + scatter
+    under vmap (one batched argsort / scatter after lowering)."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(
+        lambda kk: coordinate(kk, n, r, c=c, dtype=dtype))(keys)
 
 
 def dependent_diagonal_batched(key: Array, diag_energy: Array, r: int,
                                c: float = 1.0,
                                dtype: jnp.dtype = jnp.float32) -> Array:
-    """Batched diagonal-Sigma Algorithm 4: vmapped water-filling + ONE
-    batched Madow systematic draw over (batch, n) energy rows."""
-    batch, n = diag_energy.shape
-    pi = jax.vmap(
-        lambda s: waterfill_inclusion_probs(jnp.maximum(s, 0.0), r)
-    )(diag_energy)                                         # (batch, n)
+    """Batched diagonal-Sigma Algorithm 4: vmapped water-filling + Madow
+    systematic draw, one key per (batch, n) energy row — a device holding
+    a G-shard of the energy buffer draws its V rows from local data."""
+    batch = diag_energy.shape[0]
     keys = jax.random.split(key, batch)
-    idx = jax.vmap(lambda kk, p: systematic_sample(kk, p, r))(keys, pi)
-    pi_sel = jnp.take_along_axis(pi, idx, axis=-1)         # (batch, r)
-    w = jnp.sqrt(c / jnp.maximum(pi_sel, 1e-12)).astype(dtype)
-    rows = jnp.arange(batch)[:, None]
-    cols = jnp.arange(r)[None, :]
-    return jnp.zeros((batch, n, r), dtype).at[rows, idx, cols].set(w)
+    return jax.vmap(
+        lambda kk, s: dependent_diagonal(kk, s, r, c=c, dtype=dtype)
+    )(keys, diag_energy)
 
 
 def sample_v_batched(name: str, key: Array, batch: int, n: int, r: int,

@@ -185,6 +185,11 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
         p_abs, opt_abs = jax.eval_shape(
             lambda p: method.init(p, tcfg, jax.random.key(0)), params_abs)
         p_ps, o_ps = method.pspecs(mesh, specs, p_abs, opt_abs)
+        # Analytic per-buffer audit of the grouped layout (empty for dense
+        # methods); the dry-run records it and asserts no grouped buffer
+        # stays fully replicated above rules.SHARD_CAP_BYTES per device.
+        meta["shard_report"] = rules.lowrank_shard_report(
+            mesh, p_ps, o_ps, p_abs, opt_abs)
         args = (p_abs, opt_abs, batch_abs)
         shardings = (rules.named_shardings(mesh, p_ps),
                      rules.named_shardings(mesh, o_ps), batch_sh)

@@ -29,12 +29,14 @@ import traceback
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, optimizer: str,
-             save_hlo: str = ""):
+             save_hlo: str = "", fuse_outer: bool = False):
     import jax
     from repro.analysis import hlo_cost
-    from repro.configs import SHAPE_BY_NAME, get_config, cell_supported
+    from repro.configs import (SHAPE_BY_NAME, TrainConfig, get_config,
+                               cell_supported)
     from repro.launch import cells
     from repro.launch.mesh import make_production_mesh
+    from repro.sharding import rules
 
     cfg = get_config(arch)
     shape = SHAPE_BY_NAME[shape_name]
@@ -43,9 +45,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, optimizer: str,
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": reason}
     mesh = make_production_mesh(multi_pod=multi_pod)
+    tcfg = TrainConfig(fuse_outer=True) if fuse_outer else None
     t0 = time.time()
     step, args, shardings, meta = cells.build_cell(
-        cfg, shape, mesh, optimizer=optimizer or None)
+        cfg, shape, mesh, tcfg=tcfg, optimizer=optimizer or None)
     jitted = jax.jit(step, in_shardings=shardings, donate_argnums=(0, 1))
     lowered = jitted.lower(*args)
     t_lower = time.time() - t0
@@ -86,6 +89,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, optimizer: str,
         },
         "collectives": lac["collective_bytes"],
     }
+    # Grouped-layout audit (train cells only): record the analytic
+    # per-device bytes of the stacked low-rank buffers and FAIL the cell
+    # if any of them stays fully replicated above the policy cap — the
+    # checkable form of "no fully-replicated low-rank buffer".
+    report = meta.get("shard_report") or []
+    if report:
+        rec["per_device_bytes"] = rules.assert_well_sharded(report)
     return rec
 
 
@@ -99,6 +109,10 @@ def main(argv=None):
                    help="'' -> lowrank_adam (paper); any registered "
                         "method name (adamw | lowrank_lr | galore | ...) "
                         "lowers its own train cell")
+    p.add_argument("--fuse-outer", action="store_true",
+                   help="lower the train cells with the outer "
+                        "merge+resample folded into the inner step as a "
+                        "traced cond (tcfg.fuse_outer)")
     p.add_argument("--out", default="")
     p.add_argument("--save-hlo", default="")
     p.add_argument("--continue-on-error", action="store_true")
@@ -116,7 +130,8 @@ def main(argv=None):
                 tag = f"{arch} x {shape} [{'2x16x16' if mp else '16x16'}]"
                 try:
                     rec = run_cell(arch, shape, mp, args.optimizer,
-                                   save_hlo=args.save_hlo)
+                                   save_hlo=args.save_hlo,
+                                   fuse_outer=args.fuse_outer)
                 except Exception as e:  # noqa: BLE001
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "2x16x16" if mp else "16x16",

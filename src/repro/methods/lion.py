@@ -41,7 +41,8 @@ class LowRankLionMethod(_LowRankBase):
                         loss_fn: Optional[Callable] = None) -> Callable:
         # the generic train step: the lion branch lives inside
         # subspace.inner_update, keyed off the layout's algo tag
-        return steps_mod.make_train_step(cfg, tcfg, loss_fn)
+        return self._maybe_fuse(
+            steps_mod.make_train_step(cfg, tcfg, loss_fn), tcfg)
 
     def describe(self):
         return {**super().describe(),

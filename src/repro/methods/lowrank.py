@@ -29,8 +29,18 @@ class _LowRankBase(Method):
         # batched W += V B^T on the stacked buffer.
         return subspace.init_grouped(params, tcfg, key)
 
-    def make_outer_step(self, cfg, tcfg) -> Callable:
+    def make_outer_step(self, cfg, tcfg) -> Optional[Callable]:
+        if getattr(tcfg, "fuse_outer", False):
+            return None  # folded into the inner step; Trainer skips outer
         return steps_mod.make_outer_step(cfg, tcfg)
+
+    def _maybe_fuse(self, step: Callable, tcfg) -> Callable:
+        """Wrap the inner step with the traced-cond outer when
+        ``tcfg.fuse_outer`` — bit-identical to separate dispatch
+        (tests/test_fused_outer.py) with one fewer program launch."""
+        if getattr(tcfg, "fuse_outer", False):
+            return steps_mod.fuse_outer_into_inner(step, tcfg)
+        return step
 
     def pspecs(self, mesh, specs, params_abs, opt_abs):
         return rules.grouped_param_pspecs(mesh, specs, params_abs), \
@@ -53,7 +63,8 @@ class LowRankAdamMethod(_LowRankBase):
 
     def make_inner_step(self, cfg, tcfg,
                         loss_fn: Optional[Callable] = None) -> Callable:
-        return steps_mod.make_train_step(cfg, tcfg, loss_fn)
+        return self._maybe_fuse(
+            steps_mod.make_train_step(cfg, tcfg, loss_fn), tcfg)
 
     def describe(self):
         return {**super().describe(),
@@ -74,7 +85,8 @@ class LowRankLRMethod(_LowRankBase):
 
     def make_inner_step(self, cfg, tcfg,
                         loss_fn: Optional[Callable] = None) -> Callable:
-        return steps_mod.make_zo_train_step(cfg, tcfg, loss_fn)
+        return self._maybe_fuse(
+            steps_mod.make_zo_train_step(cfg, tcfg, loss_fn), tcfg)
 
     def describe(self):
         return {**super().describe(),

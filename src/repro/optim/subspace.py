@@ -316,6 +316,13 @@ def _sample_proj_group(name, key, spec: GroupSpec, n_members: int, c,
     Leading expert/layer dims fold into the sample batch; for
     ``dependent_diag`` each member's (k,) energy row is repeated across its
     own leading dims (one EMA per leaf, as in the per-leaf layout).
+
+    Shard locality: every batched sampler splits ``key`` once per batch
+    row and vmaps the single draw (see ``core.samplers``), so row g of
+    the result depends only on keys[g] (+ energy row g).  Under the
+    G-sharded layout of ``sharding.rules`` each device therefore draws
+    exactly its local ``(G-shard) + lead`` slice of V in place — the
+    resample never all-gathers V or the energy EMA.
     """
     lead = spec.shape[:-2]
     k_dim = spec.shape[-2]
@@ -706,6 +713,13 @@ def outer_merge_resample(params, state: SubspaceState, tcfg):
     tests/test_grouped_params.py).  On a raw model tree the member weights
     are stacked/unstacked around the same batched merge (the per-leaf-
     weights compat path; identical key schedule, bit-identical results).
+
+    Runs fully sharded: W/V/B share one G-axis split per group (the
+    :func:`~repro.sharding.rules.state_pspecs` invariant), so the merge
+    is shard-local on G, and the resample draw is per-row keyed — each
+    device regenerates only its own G-shard of V.  With
+    ``tcfg.fuse_outer`` this whole function lowers inside the inner step
+    under a traced ``lax.cond`` (``train.steps.fuse_outer_into_inner``).
     """
     nkey, skey = jax.random.split(state.key)
     grouped = isinstance(params, GroupedParams)

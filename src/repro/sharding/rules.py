@@ -10,6 +10,27 @@ the outer merge W += V B^T needs any resharding.
 Every rule is divisibility-checked against the mesh; a dim that does not
 divide falls back to replication for that axis (logged) instead of relying
 on GSPMD padding — compile-safe for every assigned architecture.
+
+Stacked-buffer (G-axis) policy — see docs/sharding.md for the math:
+  The grouped structure-of-arrays buffers (master weight groups, B/m/v
+  — including int8 q/scale sub-leaves — V, energy) carry the group axis
+  G first.  Two passes decide their pspecs:
+
+  1. *G-axis split*: free mesh axes from :data:`GROUP_AXES` (``model``
+     first, then ``pod``) are assigned to axis 0 when the member count
+     divides the cumulative axis product — groups smaller than the axis
+     fall back to replication on G (divisibility rule, no GSPMD padding).
+  2. *Size-capped backstop*: any stacked buffer whose per-device bytes
+     still exceed :data:`SHARD_CAP_BYTES` greedily takes the remaining
+     free mesh axes on its largest divisible dims (the rank axis of
+     state buffers is never split — every kernel assumes a whole r).
+     This is what guarantees "no fully-replicated low-rank buffer" on
+     the giant cells, where G is tiny (1-2 members) but a single
+     member is tens of GiB.
+
+  :func:`lowrank_shard_report` / :func:`assert_well_sharded` make the
+  result checkable: the dry-run fails any train cell whose grouped
+  buffers replicate more than the cap per device.
 """
 from __future__ import annotations
 
@@ -39,6 +60,14 @@ LOGICAL_TO_MESH = {
 }
 
 BATCH_AXES = ("pod", "data")  # batch shards over both at multi-pod
+
+# Stacked-buffer policy knobs: candidate mesh axes for the group (G) axis,
+# axis preference order for the size-capped backstop, and the replication
+# cap — a stacked low-rank buffer may keep more than this per device only
+# if no divisible dim is left to split.
+GROUP_AXES = ("model", "pod")
+BACKSTOP_AXES = ("model", "data", "pod")
+SHARD_CAP_BYTES = 64 * 2**20
 
 
 def _axis_size(mesh: Mesh, name) -> int:
@@ -89,26 +118,127 @@ def adamw_state_pspecs(mesh: Mesh, specs) -> Any:
     return adamw.AdamWState(m=pp, v=pp, step=P())
 
 
+def _entry_axes(entry):
+    """Mesh axes named by one PartitionSpec entry (handles tuples/None)."""
+    if entry is None:
+        return ()
+    return tuple(entry) if isinstance(entry, tuple) else (entry,)
+
+
+def _used_axes(parts) -> set:
+    used = set()
+    for p in parts:
+        used.update(_entry_axes(p))
+    return used
+
+
+def _g_axes(mesh: Mesh, n_members: int, used: set) -> tuple:
+    """Mesh axes to split the group (G) axis over: greedy cumulative
+    assignment over :data:`GROUP_AXES` — an axis joins only when the
+    member count divides the grown product (a group smaller than the
+    axis replicates on G, per the repo-wide divisibility rule)."""
+    axes, prod = [], 1
+    for ax in GROUP_AXES:
+        if ax not in mesh.shape or ax in used:
+            continue
+        if n_members % (prod * mesh.shape[ax]) == 0:
+            axes.append(ax)
+            prod *= mesh.shape[ax]
+    return tuple(axes)
+
+
+def _pack_entry(axes):
+    """PartitionSpec entry from a tuple of mesh axes."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def per_device_bytes(shape, itemsize: int, pspec, mesh: Mesh) -> int:
+    """Bytes of one buffer resident per device under ``pspec``:
+    prod(shape) * itemsize / prod(sizes of every mesh axis it names).
+    Analytic — usable on abstract arrays, before any compile."""
+    total = int(itemsize)
+    for d in shape:
+        total *= int(d)
+    denom = 1
+    for entry in pspec:
+        for ax in _entry_axes(entry):
+            denom *= _axis_size(mesh, ax)
+    return total // denom
+
+
+def _backstop(mesh: Mesh, shape, itemsize: int, parts: list,
+              frozen=()) -> list:
+    """Size-capped replication backstop for one stacked buffer.
+
+    While the buffer keeps more than :data:`SHARD_CAP_BYTES` per device,
+    assign each still-free mesh axis (in :data:`BACKSTOP_AXES` order) to
+    the largest unassigned divisible dim.  ``frozen`` dims (the rank axis
+    of state buffers) are never split.  Returns the updated parts list;
+    gives up silently when nothing divides — the assertion layer decides
+    whether that is fatal.
+    """
+    used = _used_axes(parts)
+    for ax in BACKSTOP_AXES:
+        if per_device_bytes(shape, itemsize, parts, mesh) <= SHARD_CAP_BYTES:
+            break
+        if ax not in mesh.shape or ax in used:
+            continue
+        cand = [d for d in range(len(shape))
+                if parts[d] is None and d not in frozen
+                and shape[d] % mesh.shape[ax] == 0]
+        if not cand:
+            continue
+        d = max(cand, key=lambda i: shape[i])
+        parts[d] = ax
+        used.add(ax)
+    return parts
+
+
+def _stacked_parts(mesh: Mesh, g_entry, member_parts, shape,
+                   itemsize: int, frozen=()) -> list:
+    """Full pspec parts for one ``(G,) + member-shape`` stacked buffer:
+    the group's shared G-axis split + member-consensus inner axes + the
+    size-capped backstop.  ``g_entry`` must be the SAME for every buffer
+    of a group (weights, V, B, m, v, energy) so the batched inner update
+    and the outer merge ``W += V B^T`` see co-located G-shards — it is
+    computed once per group from the weight-consensus axes (a superset of
+    every state buffer's axes, so the assignment is free for all of
+    them).  ``shape``/``itemsize`` describe the stacked buffer; ``frozen``
+    indexes into it (0 is the G axis)."""
+    parts = [g_entry] + list(member_parts)
+    return _backstop(mesh, shape, itemsize, parts, frozen=frozen)
+
+
 def grouped_param_pspecs(mesh: Mesh, specs, gparams) -> Any:
     """PartitionSpecs for grouped master weights (``GroupedParams``).
 
-    Mirrors :func:`state_pspecs`'s rules for the weight buffers themselves:
-    each group's stacked ``(G,) + lead + (k, n)`` buffer gets the
-    member-consensus weight sharding with the group axis replicated (an
-    axis keeps its mesh assignment only when every member's own pspec
-    agrees); dense leaves shard exactly like their ungrouped weight.
-    Returns a ``GroupedParams`` whose leaves are PartitionSpecs — feed it
-    to :func:`named_shardings`.
+    Each group's stacked ``(G,) + lead + (k, n)`` buffer gets the
+    member-consensus weight sharding (an axis keeps its mesh assignment
+    only when every member's own pspec agrees) with the group axis SPLIT
+    over :data:`GROUP_AXES` when the member count divides, plus the
+    size-capped backstop of :func:`_backstop` — a giant group whose
+    members disagree (mistral's fused-attention group) still shards its
+    k/n dims instead of replicating tens of GiB.  Dense leaves shard
+    exactly like their ungrouped weight.  Returns a ``GroupedParams``
+    whose leaves are PartitionSpecs — feed it to :func:`named_shardings`.
     """
     flat_specs = jax.tree.leaves(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
     layout = gparams.layout
     dense = tuple(spec_pspec(mesh, flat_specs[i]) for i in layout.dense_idx)
     groups = []
-    for spec in layout.groups:
+    for spec, wbuf in zip(layout.groups, gparams.groups):
         member_ps = [spec_pspec(mesh, flat_specs[i]) for i in spec.leaf_idx]
         parts = _consensus_parts(member_ps, len(spec.shape))
-        groups.append(P(*([None] + parts)))
+        g_entry = _pack_entry(
+            _g_axes(mesh, len(spec.leaf_idx), _used_axes(parts)))
+        item = (np.dtype(wbuf.dtype).itemsize
+                if hasattr(wbuf, "dtype") else 4)
+        groups.append(P(*_stacked_parts(
+            mesh, g_entry, parts,
+            (len(spec.leaf_idx),) + spec.shape, item)))
     return subspace.GroupedParams(dense=dense, groups=tuple(groups),
                                   layout=layout, treedef=gparams.treedef)
 
@@ -127,9 +257,16 @@ def state_pspecs(mesh: Mesh, specs, state) -> Any:
     """PartitionSpecs for a grouped SubspaceState.
 
     Each group's stacked arrays get the member-consensus weight sharding
-    with the group axis replicated: V (G, ..., k, r) inherits the weight's
-    k-axis, B/m/v (G, ..., n, r) the n-axis, rank axis replicated; energy
-    (G, k) replicated.  Dense slots shard exactly like their weight.
+    on the inner axes — V (G, ..., k, r) inherits the weight's k-axis,
+    B/m/v (G, ..., n, r) the n-axis, rank axis always whole — plus the
+    stacked-buffer policy on top: the G axis splits over
+    :data:`GROUP_AXES` when the member count divides (one shared
+    assignment per group, so W/V/B/m/v G-shards are co-located for the
+    batched kernels), and the :func:`_backstop` shards the largest
+    divisible dim of anything still above :data:`SHARD_CAP_BYTES` per
+    device.  Energy (G, k) follows the G split (each device's Madow draw
+    reads its local energy rows).  Dense slots shard exactly like their
+    weight.
     """
     flat_specs = jax.tree.leaves(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
@@ -141,10 +278,15 @@ def state_pspecs(mesh: Mesh, specs, state) -> Any:
     groups = []
     for spec, slot in zip(state.layout.groups, state.groups):
         ndim = len(spec.shape)
+        n_members = len(spec.leaf_idx)
         member_ps = [spec_pspec(mesh, flat_specs[i]) for i in spec.leaf_idx]
         parts = _consensus_parts(member_ps, ndim)
         lead = parts[:-2]
         k_ax, n_ax = parts[-2], parts[-1]
+        # One G split per group, derived from the weight-consensus axes
+        # (a superset of every state buffer's axes) — identical to the
+        # entry grouped_param_pspecs computes for the weight buffer.
+        g_entry = _pack_entry(_g_axes(mesh, n_members, _used_axes(parts)))
         # V sharded along the weight's FSDP axis forces a partial-sum
         # all-reduce in every x@V; replicating avoids it but costs
         # per-device bytes.  Size-aware rule (§Perf iter 5): replicate
@@ -154,28 +296,59 @@ def state_pspecs(mesh: Mesh, specs, state) -> Any:
         # same-shape Vs must not flip them into the all-reduce regime.
         # Sized with V's REAL itemsize — a bf16-compute run stores V at
         # half width, so twice the members fit under the replicate cap.
+        # The backstop still applies to the stacked buffer (G-sharding
+        # does not change the per-member judgement; an over-cap stack of
+        # small Vs splits on G or lead dims first, k only as last resort).
         v_item = (np.dtype(slot.proj.dtype).itemsize
                   if hasattr(slot.proj, "dtype") else 4)
         v_bytes = v_item * np.prod(slot.proj.shape[1:]) if hasattr(
             slot.proj, "shape") else 0
         v_k = None if v_bytes < 64 * 2**20 else k_ax
-        proj = P(*([None] + lead + [v_k, None]))
-        b = P(*([None] + lead + [n_ax, None]))
+        v_shape = (n_members,) + spec.shape[:-2] + (spec.shape[-2],
+                                                    spec.rank)
+        proj = P(*_stacked_parts(mesh, g_entry, lead + [v_k, None],
+                                 v_shape, v_item,
+                                 frozen=(len(v_shape) - 1,)))
+        # B and its moments share one parts assignment (they move through
+        # the same fused kernel); sized at fp32 width when any moment is
+        # unquantized so the widest buffer is what meets the cap.
+        b_shape = (n_members,) + spec.shape[:-2] + (spec.shape[-1],
+                                                    spec.rank)
+        b_item = (np.dtype(slot.b.dtype).itemsize
+                  if hasattr(slot.b, "dtype") else 4)
+        if not (quant.is_quantized(slot.m) and quant.is_quantized(slot.v)):
+            b_item = max(b_item, 4)
+        b = P(*_stacked_parts(mesh, g_entry, lead + [n_ax, None],
+                              b_shape, b_item,
+                              frozen=(len(b_shape) - 1,)))
 
         # moments follow B's sharding; int8-quantized moments are a
         # (payload, scale) pytree node — the payload keeps the logical
         # shape (so B's pspec applies verbatim) and the flat per-block
-        # scale vector is replicated (its blocks cross member/axis
-        # boundaries; at ~1/128 of the payload it is not worth sharding)
-        def _moment_pspec(x, b_ps=b):
+        # scale vector mirrors the payload's G split when its raveled
+        # blocks align to the shard boundary (a G-shard is a contiguous
+        # run of member payloads, so alignment needs the per-shard
+        # element count to be a whole number of scale blocks); inner-axis
+        # shards leave the scale replicated — raveled blocks interleave
+        # across those boundaries and at ~1/128 of the payload the bytes
+        # are not worth a mismatched layout.
+        def _moment_pspec(x, b_ps=b, g_entry=g_entry):
             if isinstance(x, quant.QuantizedTensor):
-                return quant.QuantizedTensor(q=b_ps, scale=P(None),
-                                             block=x.block, codec=x.codec)
+                pg = 1
+                for ax in _entry_axes(g_entry):
+                    pg *= _axis_size(mesh, ax)
+                elems = 1
+                for d in x.q.shape:
+                    elems *= int(d)
+                aligned = pg > 1 and elems % (pg * x.block) == 0
+                return quant.QuantizedTensor(
+                    q=b_ps, scale=P(g_entry if aligned else None),
+                    block=x.block, codec=x.codec)
             return b_ps
 
         groups.append(subspace.GroupedLowRankSlot(
             proj=proj, b=b, m=_moment_pspec(slot.m),
-            v=_moment_pspec(slot.v), energy=P(None, None)))
+            v=_moment_pspec(slot.v), energy=P(g_entry, None)))
     return subspace.SubspaceState(
         dense=dense, groups=tuple(groups), step=P(), outer_step=P(),
         key=P(), layout=state.layout)
@@ -199,3 +372,80 @@ def named_shardings(mesh: Mesh, pspec_tree) -> Any:
     return jax.tree.map(
         lambda ps: NamedSharding(mesh, ps),
         pspec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def lowrank_shard_report(mesh: Mesh, p_ps, o_ps, p_abs, o_abs) -> list:
+    """Per-buffer audit of the grouped low-rank layout under its pspecs.
+
+    Walks the grouped master weights and every SubspaceState slot leaf
+    (including int8 q/scale sub-leaves) and returns one row per buffer:
+    ``{name, shape, dtype, pspec, total_bytes, per_device_bytes,
+    replicated, grouped}``.  Analytic — works on the abstract
+    ``eval_shape`` trees the launch cells already build, before any
+    compile.  Non-grouped methods (plain adamw) yield an empty report.
+    """
+    rows: list = []
+
+    def row(name: str, leaf, ps, grouped: bool) -> None:
+        shape = tuple(int(d) for d in getattr(leaf, "shape", ()))
+        try:
+            item = int(np.dtype(leaf.dtype).itemsize)
+        except Exception:
+            item = 4
+        total = item
+        for d in shape:
+            total *= d
+        per_dev = per_device_bytes(shape, item, ps, mesh)
+        rows.append({
+            "name": name, "shape": shape, "dtype": str(leaf.dtype),
+            "pspec": str(ps), "total_bytes": total,
+            "per_device_bytes": per_dev,
+            "replicated": per_dev == total, "grouped": grouped,
+        })
+
+    if isinstance(p_abs, subspace.GroupedParams):
+        for g, (buf, ps) in enumerate(zip(p_abs.groups, p_ps.groups)):
+            row(f"params.groups[{g}]", buf, ps, True)
+        for i, (buf, ps) in enumerate(zip(p_abs.dense, p_ps.dense)):
+            row(f"params.dense[{i}]", buf, ps, False)
+    if isinstance(o_abs, subspace.SubspaceState):
+        for g, (slot, ps) in enumerate(zip(o_abs.groups, o_ps.groups)):
+            for field in ("proj", "b", "m", "v", "energy"):
+                a, p_ = getattr(slot, field), getattr(ps, field)
+                if isinstance(a, quant.QuantizedTensor):
+                    row(f"opt.groups[{g}].{field}.q", a.q, p_.q, True)
+                    row(f"opt.groups[{g}].{field}.scale",
+                        a.scale, p_.scale, True)
+                else:
+                    row(f"opt.groups[{g}].{field}", a, p_, True)
+    return rows
+
+
+def assert_well_sharded(report: list, cap: int = SHARD_CAP_BYTES) -> dict:
+    """Fail when any grouped buffer stays fully replicated above ``cap``.
+
+    A buffer that is *sharded* but still large per device is allowed (it
+    means every divisible dim was taken — mistral's consensus-conflicted
+    fused-attention group lands there on the single-pod mesh); only
+    replication with bytes left on the table is a policy failure.  Returns
+    a summary dict for the dry-run record: buffer count, the max and the
+    summed per-device bytes of the grouped buffers.
+    """
+    grouped = [r for r in report if r["grouped"]]
+    bad = [r for r in grouped
+           if r["replicated"] and r["per_device_bytes"] > cap]
+    if bad:
+        lines = "\n".join(
+            f"  {r['name']} {r['shape']} {r['dtype']} {r['pspec']} "
+            f"= {r['per_device_bytes'] / 2**20:.1f} MiB replicated"
+            for r in bad)
+        raise AssertionError(
+            f"{len(bad)} grouped buffer(s) fully replicated above "
+            f"{cap / 2**20:.0f} MiB per device:\n{lines}")
+    return {
+        "buffers": len(grouped),
+        "max_per_device_bytes": max(
+            (r["per_device_bytes"] for r in grouped), default=0),
+        "sum_per_device_bytes": sum(
+            r["per_device_bytes"] for r in grouped),
+    }

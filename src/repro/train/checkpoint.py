@@ -83,6 +83,25 @@ def _key_str(p) -> str:
         (str(p.idx) if hasattr(p, "idx") else str(p.name))
 
 
+def _to_numpy(leaf) -> np.ndarray:
+    """Host copy of one leaf, sharded arrays included.
+
+    ``np.asarray`` handles numpy/scalars and any fully-addressable
+    jax.Array (including G-sharded grouped buffers on a single-process
+    mesh — the shards gather through ``__array__``).  A multi-process
+    array whose shards live on other hosts is not addressable locally, so
+    it is gathered first via ``multihost_utils.process_allgather``; the
+    archive stays the unsharded logical array either way, which is what
+    makes restore elastic (``restore(shardings=...)`` re-device_puts onto
+    ANY mesh, so a checkpoint written under one G-sharding resumes under
+    another).
+    """
+    if isinstance(leaf, jax.Array) and not leaf.is_fully_addressable:
+        from jax.experimental import multihost_utils
+        leaf = multihost_utils.process_allgather(leaf, tiled=True)
+    return np.asarray(leaf)
+
+
 def _flatten(tree) -> dict:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
@@ -90,7 +109,7 @@ def _flatten(tree) -> dict:
         key = SEP.join(_key_str(p) for p in path)
         if _is_prng_key(leaf):  # typed PRNG keys serialise as raw data
             leaf = jax.random.key_data(leaf)
-        out[key] = np.asarray(leaf)
+        out[key] = _to_numpy(leaf)
     return out
 
 

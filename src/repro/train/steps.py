@@ -134,6 +134,36 @@ def make_outer_step(cfg: ModelConfig, tcfg: TrainConfig):
     return outer_step
 
 
+def fuse_outer_into_inner(inner_step: Callable, tcfg: TrainConfig):
+    """Fold the outer merge+resample into the inner step as a traced cond.
+
+    Returns a step with the inner signature that first runs
+    ``outer_merge_resample`` under ``lax.cond(step > 0 and step % lazy_k
+    == 0)`` — the same ordering the Trainer uses when it dispatches the
+    outer step separately (outer BEFORE the inner at the cadence
+    boundary), and the same traced-cadence shape as GaLore's in-step SVD
+    refresh.  One jitted program covers both branches: no retrace at the
+    boundary, the params/state carry stays donated end to end, and the
+    compiler schedules the resample draw (per-G-shard local, see
+    ``core.samplers``) alongside the inner step's early compute instead
+    of serialising it behind a host round-trip.  ``opt_state.step`` rides
+    in the checkpoint, so resume keeps the cadence exactly like the
+    separate-dispatch path.
+    """
+
+    def fused_step(params, opt_state, batch):
+        fire = jnp.logical_and(opt_state.step > 0,
+                               opt_state.step % tcfg.lazy_k == 0)
+        params, opt_state = jax.lax.cond(
+            fire,
+            lambda args: subspace.outer_merge_resample(*args, tcfg),
+            lambda args: args,
+            (params, opt_state))
+        return inner_step(params, opt_state, batch)
+
+    return fused_step
+
+
 # ---------------------------------------------------------------------------
 # Vanilla IPA (full AdamW) baseline
 # ---------------------------------------------------------------------------

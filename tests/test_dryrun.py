@@ -13,6 +13,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 CELLS = [
     ("llama-60m", "train_4k", []),          # paper's own arch, train path
+    ("llama-60m", "train_4k", ["--fuse-outer"]),  # traced-cond outer
     ("mamba2-780m", "long_500k", []),       # ssm decode, O(1) state
 ]
 
@@ -30,6 +31,11 @@ def test_dryrun_cell_compiles(arch, shape, extra, tmp_path):
     assert recs[0]["status"] == "ok"
     assert recs[0]["cost"]["flops"] > 0
     assert recs[0]["memory"]["device_total_bytes"] > 0
+    if recs[0]["kind"] == "train":
+        # grouped-layout audit passed assert_well_sharded and was recorded
+        pdb = recs[0]["per_device_bytes"]
+        assert pdb["buffers"] > 0
+        assert 0 < pdb["max_per_device_bytes"] <= pdb["sum_per_device_bytes"]
 
 
 def test_dryrun_multi_pod_cell(tmp_path):

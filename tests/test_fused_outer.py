@@ -1,0 +1,67 @@
+"""Fused outer merge+resample (``tcfg.fuse_outer``).
+
+The traced-cond wrapper must be BIT-identical to the Trainer's separate
+dispatch (outer before inner at every ``step > 0 and step % lazy_k == 0``
+boundary): same key schedule (the cond only gates execution, never
+consumes randomness), same ordering, same donation-friendly signature.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, methods
+from repro.configs import TrainConfig
+from repro.models import lm
+
+
+def _batch(b=2, s=16):
+    return {"tokens": jnp.zeros((b, s), jnp.int32),
+            "labels": jnp.zeros((b, s), jnp.int32)}
+
+
+@pytest.mark.parametrize("optimizer", ["lowrank_adam", "lowrank_lion"])
+def test_fused_outer_bitwise_equals_separate_dispatch(optimizer):
+    cfg = configs.get_config("llama-tiny")
+    method = methods.get(optimizer)
+    params = lm.init_params(cfg, jax.random.key(0))
+    batch = _batch()
+    kw = dict(lazy_k=2, total_steps=10, warmup_steps=1)
+
+    tcfg_f = TrainConfig(optimizer=optimizer, fuse_outer=True, **kw)
+    assert method.make_outer_step(cfg, tcfg_f) is None
+    p_f, s_f = method.init(params, tcfg_f, jax.random.key(1))
+    fused = jax.jit(method.make_inner_step(cfg, tcfg_f))
+
+    tcfg_s = TrainConfig(optimizer=optimizer, fuse_outer=False, **kw)
+    p_s, s_s = method.init(params, tcfg_s, jax.random.key(1))
+    inner = jax.jit(method.make_inner_step(cfg, tcfg_s))
+    outer = jax.jit(method.make_outer_step(cfg, tcfg_s))
+
+    for _ in range(5):  # crosses two cadence boundaries (steps 2 and 4)
+        p_f, s_f, _ = fused(p_f, s_f, batch)
+        if int(s_s.step) > 0 and int(s_s.step) % tcfg_s.lazy_k == 0:
+            p_s, s_s = outer(p_s, s_s)
+        p_s, s_s, _ = inner(p_s, s_s, batch)
+
+    assert int(s_f.outer_step) == int(s_s.outer_step) == 2
+    for a, b in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_f.groups), jax.tree.leaves(s_s.groups)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_outer_never_fires_before_first_boundary():
+    """step 0 must NOT merge (V is fresh, B is zero): outer_step stays 0
+    until the first lazy_k boundary — matching Trainer's ``step > 0``."""
+    cfg = configs.get_config("llama-tiny")
+    method = methods.get("lowrank_adam")
+    tcfg = TrainConfig(fuse_outer=True, lazy_k=3, total_steps=10,
+                       warmup_steps=1)
+    p, s = method.init(lm.init_params(cfg, jax.random.key(0)), tcfg,
+                       jax.random.key(1))
+    fused = jax.jit(method.make_inner_step(cfg, tcfg))
+    batch = _batch()
+    for expect_outer in (0, 0, 0, 1, 1):
+        p, s, _ = fused(p, s, batch)
+        assert int(s.outer_step) == expect_outer

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Docs-consistency gate (CI lint job; stdlib only, no jax import).
+
+Greps the source tree for the two name sets the docs promise to cover:
+
+* every ``REPRO_[A-Z_]+`` environment knob used anywhere under ``src/``
+  or ``benchmarks/`` must appear in ``docs/knobs.md``;
+* every method name registered at module level in
+  ``src/repro/methods/*.py`` (column-0 ``@register("name")`` — docstring
+  examples are indented and do not match) must appear in both
+  ``README.md`` and ``docs/knobs.md``.
+
+Exit 0 when the docs are complete, 1 with a listing otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+ENV_RE = re.compile(r"\bREPRO_[A-Z][A-Z_]+\b")
+REGISTER_RE = re.compile(r'^@register\("([a-z0-9_]+)"\)', re.M)
+
+
+def _env_knobs() -> set:
+    knobs = set()
+    for root in ("src", "benchmarks"):
+        for path in (REPO / root).rglob("*.py"):
+            knobs.update(ENV_RE.findall(path.read_text()))
+    return knobs
+
+
+def _methods() -> set:
+    names = set()
+    for path in (REPO / "src/repro/methods").glob("*.py"):
+        names.update(REGISTER_RE.findall(path.read_text()))
+    return names
+
+
+def main() -> int:
+    knobs_md = (REPO / "docs/knobs.md").read_text()
+    readme = (REPO / "README.md").read_text()
+    missing = []
+    for knob in sorted(_env_knobs()):
+        if knob not in knobs_md:
+            missing.append(f"{knob}: used in source, missing from docs/knobs.md")
+    for name in sorted(_methods()):
+        for doc, text in (("README.md", readme), ("docs/knobs.md", knobs_md)):
+            if not re.search(rf"\b{re.escape(name)}\b", text):
+                missing.append(
+                    f"method {name!r}: registered, missing from {doc}")
+    if missing:
+        print("docs out of date:")
+        for line in missing:
+            print(f"  {line}")
+        return 1
+    print(f"docs cover {len(_env_knobs())} REPRO_* knobs and "
+          f"{len(_methods())} registered methods")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
