@@ -53,6 +53,12 @@ MIN_INT8_STATE_BYTES_REDUCTION = 0.50
 # in the SAME run (host-independent), may not exceed 1 + this fraction
 MAX_GUARD_OVERHEAD = 0.25
 
+# lazy multi-tenant serving (one W + shared V + per-row rank-r B per
+# decode step) must stream at least this fraction fewer weight bytes than
+# merging W + V B^T per tenant (both sides roofline-derived in the same
+# run — the quantity the serving engine's lazy path exists to protect)
+MIN_SERVE_LAZY_BYTES_REDUCTION = 0.30
+
 
 def _ratio(record: dict, key: str, ref_key: str):
     value, ref = record.get(key), record.get(ref_key)
@@ -191,11 +197,55 @@ def check_guard_overhead(fresh: dict) -> list[str]:
     return []
 
 
+def check_serve_bytes(fresh: dict) -> list[str]:
+    """Serving gate: the serve section must carry method/dtype provenance
+    (which registered method's checkpoints the adapters come from, what
+    the engine computed in), the batched decode must have traced exactly
+    once for the whole multi-tenant workload, and the roofline-derived
+    lazy decode step must stream at least MIN_SERVE_LAZY_BYTES_REDUCTION
+    fewer weight bytes than merging ``W + V Bᵀ`` per tenant."""
+    sv = fresh.get("serve")
+    if not sv:
+        return ["serve section missing from fresh run (kernel_bench must "
+                "bench the multi-tenant engine)"]
+    failures = []
+    for tag in ("method", "compute_dtype"):
+        if sv.get(tag) is None:
+            failures.append(f"serve: no {tag!r} provenance tag in fresh run")
+        else:
+            print(f"[ok] serve: {tag}={sv[tag]!r}")
+    traces = sv.get("decode_traces")
+    if traces is not None and traces != 1:
+        failures.append(
+            f"serve: batched decode traced {traces}x for one engine "
+            f"geometry (hot-swap/continuous batching must not retrace)")
+    sb = sv.get("serve_bytes")
+    if not sb:
+        return failures + [
+            "serve: serve_bytes missing from fresh run (kernel_bench must "
+            "record the lazy-vs-merged decode-step bytes columns)"]
+    red = sb.get("reduction") or 0.0
+    lazy_mib = sb.get("lazy_bytes", 0.0) / 2**20
+    merged_mib = sb.get("merged_bytes", 0.0) / 2**20
+    floor_pct = MIN_SERVE_LAZY_BYTES_REDUCTION * 100.0
+    status = "FAIL" if red < MIN_SERVE_LAZY_BYTES_REDUCTION else "ok"
+    print(f"[{status}] serve decode bytes: lazy {lazy_mib:.2f} MiB vs "
+          f"merged-per-tenant {merged_mib:.2f} MiB "
+          f"({sb.get('tenants', sv.get('tenants'))} tenants) -> "
+          f"{red * 100:.1f}% reduction (floor {floor_pct:.0f}%)")
+    if status == "FAIL":
+        failures.append(
+            f"lazy serving removes only {red * 100:.1f}% of decode weight "
+            f"bytes (< {floor_pct:.0f}% floor)")
+    return failures
+
+
 def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     failures = check_methods_registry(fresh)
     failures += check_dtype_bytes(fresh)
     failures += check_state_bytes(fresh)
     failures += check_guard_overhead(fresh)
+    failures += check_serve_bytes(fresh)
     base_g = baseline.get("grouped_state", {})
     fresh_g = fresh.get("grouped_state", {})
     # the ms-ratio gate only means something dtype-vs-same-dtype: a bf16

@@ -68,6 +68,39 @@ def variants() -> Dict[str, TrainConfig]:
     return out
 
 
+# Serving-memory column: one ragged batch profile shared with
+# walltime_table's serving roofline (half the slots short, half long)
+SERVE_ARCHS = ("qwen2-7b", "deepseek-v2-236b", "mamba2-780m", "zamba2-7b")
+SERVE_BATCH, SERVE_MAX_LEN, SERVE_PAGE = 8, 4096, 64
+
+
+def serve_lengths() -> list:
+    """Ragged per-slot lengths: max_len / {1, 2, 4, 8} round-robin."""
+    return [SERVE_MAX_LEN // (2 ** (i % 4)) for i in range(SERVE_BATCH)]
+
+
+def serving_memory() -> Dict:
+    """Serving-memory column (roofline-derived): decode-cache bytes a
+    ragged batch actually holds under paging vs the ``max_len``
+    preallocation of ``lm.alloc_decode_state`` — one row per cache family
+    (KV / MLA / SSM / hybrid).  SSM rows barely move: their state is
+    length-independent by construction (that IS the family's point)."""
+    from repro.analysis import roofline
+    lengths = serve_lengths()
+    print("arch,family,prealloc_MB,paged_MB,savings")
+    out = {}
+    for arch in SERVE_ARCHS:
+        cfg = get_config(arch)
+        pre = roofline.dense_cache_bytes(cfg, SERVE_BATCH, SERVE_MAX_LEN)
+        paged = roofline.paged_cache_bytes(cfg, lengths, SERVE_PAGE)
+        save = 1.0 - paged / pre if pre else 0.0
+        out[arch] = {"prealloc_bytes": pre, "paged_bytes": paged,
+                     "savings": save}
+        print(f"{arch},{cfg.family},{pre/2**20:.1f},{paged/2**20:.1f},"
+              f"{save*100:.0f}%")
+    return out
+
+
 def run() -> Dict:
     cfg = get_config("encoder-small").replace(
         num_layers=2 if FAST else 4)
@@ -88,6 +121,7 @@ def run() -> Dict:
              for n in lowrank)
     print(f"# lowrank ({', '.join(lowrank)}) beats full-BP memory: "
           f"{'OK' if ok else 'VIOLATED'}")
+    out["serving"] = serving_memory()
     return out
 
 

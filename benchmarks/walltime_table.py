@@ -43,6 +43,33 @@ def time_step(cfg, tcfg, batch, seq, iters=10) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def serving_walltime() -> Dict:
+    """Serving column (roofline model, not timed): HBM-bound decode-step
+    time from the cache bytes a ragged batch sweeps per step — paged
+    arena vs ``max_len`` preallocation.  Decode attention reads the whole
+    resident buffer (masking does not save bandwidth), so the paged
+    arena's smaller footprint is a direct per-step latency bound."""
+    from repro.analysis import roofline
+    try:
+        from .memory_table import (SERVE_ARCHS, SERVE_BATCH, SERVE_MAX_LEN,
+                                   SERVE_PAGE, serve_lengths)
+    except ImportError:
+        from memory_table import (SERVE_ARCHS, SERVE_BATCH, SERVE_MAX_LEN,
+                                  SERVE_PAGE, serve_lengths)
+    lengths = serve_lengths()
+    print("arch,family,prealloc_decode_ms,paged_decode_ms")
+    out = {}
+    for arch in SERVE_ARCHS:
+        cfg = get_config(arch)
+        pre_ms = 1e3 * roofline.dense_cache_bytes(
+            cfg, SERVE_BATCH, SERVE_MAX_LEN) / roofline.HBM_BW
+        paged_ms = 1e3 * roofline.paged_cache_bytes(
+            cfg, lengths, SERVE_PAGE) / roofline.HBM_BW
+        out[arch] = {"prealloc_ms": pre_ms, "paged_ms": paged_ms}
+        print(f"{arch},{cfg.family},{pre_ms:.2f},{paged_ms:.2f}")
+    return out
+
+
 def run() -> Dict:
     cfg = get_config("encoder-small").replace(num_layers=2 if FAST else 4)
     batch, seq = (8, 128) if FAST else (16, 256)
@@ -54,6 +81,7 @@ def run() -> Dict:
         out[name] = ms
         fam = methods.get(tcfg.optimizer).describe()["family"]
         print(f"{name},{fam},{ms:.1f}")
+    out["serving"] = serving_walltime()
     return out
 
 

@@ -1,68 +1,95 @@
-"""Batched serving demo: prefill a prompt batch, then decode greedily with
-the per-family cache machinery (KV cache / MLA compressed cache / SSM
-state) — the same step functions the decode_32k / long_500k dry-run cells
-lower at production shapes.
+"""Serving demo: the continuous-batching engine with a paged decode cache
+and (optionally) multi-tenant lazy ``W + V Bᵀ`` adapters.
+
+Each request owns only the pages its sequence actually fills — no
+``max_len`` preallocation — and every decode step answers the whole batch
+through one fused low-rank forward; the argmax token never leaves the
+device between steps.
 
 Run:  PYTHONPATH=src python examples/serve.py [--arch mamba2-780m]
+      PYTHONPATH=src python examples/serve.py --tenants 2
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import TrainConfig
 from repro.models import lm
-from repro.train import steps as steps_mod
+from repro.serve import AdapterStore, Engine, EngineConfig, Request
+
+
+def _demo_adapters(cfg, n_tenants: int) -> AdapterStore:
+    """A store with ``n_tenants`` random (but shared-V) adapters."""
+    tcfg = TrainConfig(optimizer="lowrank_adam", rank=4,
+                      min_dim_for_lowrank=32)
+    store = AdapterStore(cfg, tcfg, max_tenants=n_tenants)
+    rng = np.random.default_rng(0)
+    projs = [0.02 * rng.standard_normal(v.shape, np.float32)
+             for v in store.projs]
+    for t in range(n_tenants):
+        bs = [0.02 * rng.standard_normal(
+            b.shape[:-3] + b.shape[-2:], np.float32)
+            for b in store.b_full]
+        store.add_tenant(f"tenant{t}", bs, projs)
+    return store
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="qwen2-7b",
                    help="any assigned arch (reduced config is used)")
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--batch", type=int, default=4,
+                   help="request count AND engine decode-batch width")
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--tenants", type=int, default=0,
+                   help="serve N tenants with distinct B adapters "
+                        "(0 = base weights)")
     args = p.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(cfg, jax.random.key(0))
-    prefill = jax.jit(steps_mod.make_prefill_step(cfg))
-    decode = jax.jit(steps_mod.make_decode_step(cfg))
+    adapters = _demo_adapters(cfg, args.tenants) if args.tenants else None
+
+    max_len = cfg.vision_prefix_len + args.prompt_len + args.gen
+    ecfg = EngineConfig.from_env(max_batch=args.batch, max_len=max_len,
+                                 max_out=args.gen)
+    eng = Engine(params, cfg, adapters=adapters, engine_cfg=ecfg)
 
     toks = jax.random.randint(jax.random.key(1),
                               (args.batch, args.prompt_len), 0,
                               cfg.vocab_size)
-    state = lm.alloc_decode_state(
-        cfg, args.batch, args.prompt_len + args.gen + cfg.vision_prefix_len)
-    batch = {"tokens": toks}
-    if cfg.vision_prefix_len:
-        batch["extra_embeds"] = 0.02 * jax.random.normal(
-            jax.random.key(2), (args.batch, cfg.vision_prefix_len,
-                                cfg.d_model))
+    toks = np.asarray(toks)
+    for i in range(args.batch):
+        extra = None
+        if cfg.vision_prefix_len:
+            extra = 0.02 * jax.random.normal(
+                jax.random.key(100 + i),
+                (1, cfg.vision_prefix_len, cfg.d_model))
+        tenant = f"tenant{i % args.tenants}" if args.tenants else None
+        eng.submit(Request(rid=f"req{i}", prompt=toks[i],
+                           max_new=args.gen, tenant=tenant,
+                           extra_embeds=extra))
 
     t0 = time.perf_counter()
-    logits, state = jax.block_until_ready(prefill(params, batch, state))
-    t_prefill = time.perf_counter() - t0
-    tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1).astype(jnp.int32)
+    outputs = eng.run()
+    dt = time.perf_counter() - t0
 
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.gen - 1):
-        logits, state = decode(params, tok, state)
-        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], -1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = jnp.concatenate(out, axis=1)
-    print(f"arch={cfg.name} (reduced) family={cfg.family}")
-    print(f"prefill {args.prompt_len} toks x{args.batch}: "
-          f"{t_prefill*1e3:.0f} ms")
-    print(f"decode  {args.gen-1} steps: "
-          f"{t_decode*1e3/(args.gen-1):.1f} ms/token")
-    print(f"generated ids[0]: {gen[0][:12].tolist()} ...")
-    assert bool(jnp.all(jnp.isfinite(logits)))
+    n_tok = sum(len(v) for v in outputs.values())
+    pool = eng.pool
+    print(f"arch={cfg.name} (reduced) family={cfg.family} "
+          f"tenants={args.tenants or 'base'}")
+    print(f"engine: batch={ecfg.max_batch} page_size={ecfg.page_size} "
+          f"pages={ecfg.resolved_num_pages()} "
+          f"(free after drain: {pool.available})")
+    print(f"{n_tok} tokens in {dt*1e3:.0f} ms "
+          f"({n_tok/dt:.0f} tok/s, traces={eng.traces})")
+    first = outputs["req0"]
+    print(f"generated ids[req0]: {first[:12].tolist()} ...")
+    assert all(len(v) == args.gen for v in outputs.values())
     print("serve OK")
 
 

@@ -396,6 +396,85 @@ def lowrank_inner_step_bytes(groups, tokens: int,
             "algo": algo, "tokens": tokens}
 
 
+# ---------------------------------------------------------------------------
+# Serving: paged decode-cache footprint + lazy-adapter decode traffic
+# ---------------------------------------------------------------------------
+
+def cache_token_bytes(cfg, itemsize: int = 2) -> dict:
+    """Decode-cache footprint of ONE sequence, split into the part that
+    grows with its length (``per_token``) and the part that does not
+    (``fixed`` — the SSM recurrent/conv state, fp32 ssm + act-dtype conv
+    per the SSMState contract).  Mirrors ``lm.alloc_paged_state``'s
+    geometry exactly: MLA caches the compressed (kv_lora + rope) latents
+    with a single head, dense/moe/vlm cache (K, V) per kv-head, hybrids
+    add one shared-attention KV per ``attn_every`` group."""
+    per_tok, fixed = 0, 0
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        if cfg.use_mla:
+            per_tok += cfg.num_layers * (
+                cfg.kv_lora_rank + cfg.qk_rope_dim) * itemsize
+        else:
+            per_tok += cfg.num_layers * 2 * cfg.num_kv_heads * \
+                cfg.resolved_head_dim * itemsize
+    if fam in ("ssm", "hybrid"):
+        g = max(1, getattr(cfg, "ssm_groups", 1))
+        conv_ch = cfg.ssm_d_inner + 2 * g * cfg.ssm_state
+        fixed += cfg.num_layers * (
+            cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4
+            + (cfg.ssm_conv_dim - 1) * conv_ch * itemsize)
+        if cfg.attn_every:
+            n_apps = cfg.num_layers // cfg.attn_every
+            per_tok += n_apps * 2 * cfg.num_kv_heads * \
+                cfg.resolved_head_dim * itemsize
+    return {"per_token": per_tok, "fixed": fixed}
+
+
+def paged_cache_bytes(cfg, lengths, page_size: int,
+                      itemsize: int = 2) -> int:
+    """Arena bytes actually HELD by sequences of the given lengths under
+    page_size-token paging: each sequence owns ceil(len/page) pages (the
+    last one partially filled), plus its fixed slot state."""
+    t = cache_token_bytes(cfg, itemsize)
+    total = 0
+    for n in lengths:
+        total += _cdiv(int(n), page_size) * page_size * t["per_token"]
+        total += t["fixed"]
+    return total
+
+
+def dense_cache_bytes(cfg, batch: int, max_len: int,
+                      itemsize: int = 2) -> int:
+    """The pre-paging comparator: every slot reserves ``max_len`` tokens
+    up front (``lm.alloc_decode_state``) regardless of actual length."""
+    t = cache_token_bytes(cfg, itemsize)
+    return batch * (max_len * t["per_token"] + t["fixed"])
+
+
+def serve_decode_bytes(groups, batch: int, tenants: int,
+                       compute_dtype: str = "bf16") -> dict:
+    """Weight-stream HBM bytes of ONE multi-tenant batched decode step,
+    lazy vs merged.
+
+    ``groups``: iterable of ``(k, n, r, members)`` as in
+    :func:`lowrank_inner_step_bytes`.  Lazy serving streams each base W
+    once, the shared V once, and one rank-r B per decode row
+    (``k n + k r + batch·n r`` elements per member leaf); merged serving
+    of ``tenants`` distinct adapter sets must stream a full (k, n) weight
+    per tenant (``tenants·k n``) — the traffic the paged engine's
+    ``W + V Bᵀ`` path avoids, and the quantity the bench's serve gate
+    floors."""
+    sz = _DTYPE_BYTES.get(compute_dtype, 2)
+    lazy = merged = 0.0
+    for (k, n, r, members) in groups:
+        lazy += members * (k * n + k * r + batch * n * r) * sz
+        merged += members * max(1, tenants) * k * n * sz
+    return {"lazy_bytes": lazy, "merged_bytes": merged,
+            "reduction": 1.0 - lazy / merged if merged else 0.0,
+            "batch": batch, "tenants": tenants,
+            "compute_dtype": compute_dtype}
+
+
 def roofline_terms(record: dict, cfg=None, shape=None) -> dict:
     """Three roofline terms (seconds) from one dry-run record.
 

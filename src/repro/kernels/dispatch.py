@@ -178,6 +178,14 @@ def route(op: str, *, shapes: Tuple[int, ...] = (),
         sz = _sizes(dtypes, 5, itemsize)
         if _bwd_vmem_bytes(m, k, n, r, sz) > VMEM_BUDGET:
             return "xla"
+    if op == "lowrank_batch_forward" and shapes:
+        m, k, n, r = shapes   # m = per-row tokens (seq), not batch*seq
+        sz = _sizes(dtypes, 4, itemsize)
+        # decode-shaped calls (one token per row) pad every row to a full
+        # sublane tile in the vmapped kernel — the einsum schedule wins
+        if m < SUBLANE or r > 512 or \
+                _fwd_vmem_bytes(m, k, n, r, sz) > VMEM_BUDGET:
+            return "xla"
     return "pallas"
 
 
@@ -439,6 +447,18 @@ def _pallas_merge_sr(w: Array, v: Array, b: Array, bits: Array) -> Array:
     return out[:K, :N]
 
 
+def _pallas_batch_forward(x: Array, w: Array, v: Array, b: Array) -> Array:
+    """Per-row-adapter forward as a vmap over the cached 2-D kernel.
+
+    x: (B, S, K); w: (K, N); v: (K, r); b: (B, N, r).  The batched launch
+    reuses the SAME cached kernel instance as the shared-adapter forward
+    (key = padded shape + dtypes), so tenant hot-swaps never retrace.
+    """
+    return jax.vmap(
+        lambda x2, b2: _pallas_forward(x2, w, v, b2, return_p=False),
+        in_axes=(0, 0))(x, b)
+
+
 # ---------------------------------------------------------------------------
 # XLA impls (the unfused reference schedule, fp32 accumulation)
 # ---------------------------------------------------------------------------
@@ -449,6 +469,15 @@ def _xla_forward(x2: Array, w: Array, v: Array, b: Array, return_p: bool):
          + _dot32(p.astype(jnp.float32), b.T.astype(jnp.float32))
          ).astype(x2.dtype)
     return (y, p) if return_p else y
+
+
+def _xla_batch_forward(x: Array, w: Array, v: Array, b: Array) -> Array:
+    p = jnp.einsum("bsk,kr->bsr", x, v,
+                   preferred_element_type=jnp.float32)
+    y = (jnp.einsum("bsk,kn->bsn", x, w,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bsr,bnr->bsn", p, b.astype(jnp.float32)))
+    return y.astype(x.dtype)
 
 
 def _xla_backward(dy2: Array, w: Array, v: Array, b: Array, p2: Array):
@@ -485,6 +514,8 @@ def _xla_lion_q8(b2, g2, mq, ms, bits, *, lr, beta1, beta2, wd):
 
 TABLE = {
     "lowrank_forward": {"pallas": _pallas_forward, "xla": _xla_forward},
+    "lowrank_batch_forward": {"pallas": _pallas_batch_forward,
+                              "xla": _xla_batch_forward},
     "lowrank_backward": {"pallas": _pallas_backward, "xla": _xla_backward},
     "lowrank_merge": {"pallas": _pallas_merge, "xla": ref.lowrank_merge},
     "lowrank_merge_sr": {"pallas": _pallas_merge_sr,
@@ -523,6 +554,32 @@ def lowrank_forward(x: Array, w: Array, v: Array, b: Array, *,
         return out.reshape(lead + (N,))
     y, p = out
     return y.reshape(lead + (N,)), p.reshape(lead + (r,))
+
+
+def lowrank_batch_forward(x: Array, w: Array, v: Array, b: Array) -> Array:
+    """y[i] = x[i] W + (x[i] V) B[i]^T — one launch, one adapter per row.
+
+    The multi-tenant serving op: ``x (batch, seq, k)`` against a shared
+    base ``w (k, n)`` / projection ``v (k, r)`` and a *per-row* subspace
+    stack ``b (batch, n, r)``.  The merge ``W + V B^T`` is never formed —
+    each row's correction stays rank-r.  Accumulation is fp32; the output
+    carries x.dtype.  Decode-shaped calls (seq < sublane) auto-route to
+    the einsum schedule; larger seqs take the vmapped Pallas kernel.
+    """
+    if x.ndim != 3:
+        raise ValueError(
+            f"lowrank_batch_forward: x must be (batch, seq, k), got "
+            f"{x.shape}")
+    if b.ndim != 3 or b.shape[0] != x.shape[0]:
+        raise ValueError(
+            f"lowrank_batch_forward: b must be (batch, n, r) with batch "
+            f"== x.shape[0]; got b {b.shape} vs x {x.shape}")
+    B, S, K = x.shape
+    N, r = w.shape[-1], v.shape[-1]
+    impl = TABLE["lowrank_batch_forward"][route(
+        "lowrank_batch_forward", shapes=(S, K, N, r),
+        dtypes=(x.dtype, w.dtype, v.dtype, b.dtype))]
+    return impl(x, w, v, b)
 
 
 def lowrank_backward(dy: Array, w: Array, v: Array, b: Array, p: Array):

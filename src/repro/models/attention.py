@@ -173,6 +173,127 @@ def decode_attention(
     return out.reshape(B, 1, Hq, Dv).astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Paged decode cache (serving): fixed-size pages from a shared arena
+# ---------------------------------------------------------------------------
+#
+# Layout: one arena per cache tensor, shaped (n_pages, page, H, D).  A
+# sequence owns an ordered list of page ids recorded in its page-table row
+# (-1 = unmapped); token t of a sequence lives at arena[table[t // page],
+# t % page].  All layers share ONE page-id space: page p holds the same
+# token range in every layer's arena, so a single (batch, max_pages) table
+# serves the whole model.
+
+
+def paged_write(arena: Array, new: Array, page_table: Array,
+                lengths: Array) -> Array:
+    """Scatter one new token per batch slot into a paged arena.
+
+    arena: (n_pages, page, H, D); new: (B, 1, H, D) or (B, H, D);
+    page_table: (B, max_pages) int32, -1 = unmapped; lengths: (B,) int32 —
+    tokens already stored per slot (the new token lands at position
+    ``lengths[b]``).  Slots whose target page is unmapped (inactive rows)
+    scatter out of bounds and are dropped.
+    """
+    if new.ndim == 4:
+        new = new[:, 0]
+    page = arena.shape[1]
+    pidx = jnp.minimum(lengths // page, page_table.shape[1] - 1)
+    rows = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
+    rows = jnp.where(rows >= 0, rows, arena.shape[0])   # OOB -> dropped
+    return arena.at[rows, lengths % page].set(
+        new.astype(arena.dtype), mode="drop")
+
+
+def paged_decode_attention(
+    q: Array, k_arena: Array, v_arena: Array, page_table: Array,
+    lengths: Array, *, softmax_scale: Optional[float] = None,
+) -> Array:
+    """Single-token attention over a paged KV arena (online softmax).
+
+    q: (B, 1, Hq, D); arenas: (n_pages, page, Hkv, D / Dv); lengths: (B,)
+    int32 — valid tokens per slot INCLUDING the one written this step.
+    Pages are visited in slot order, so per-row accumulation order is
+    identical to a solo run of the same sequence (bit-stable join/evict).
+    Rows with no mapped pages produce finite zeros.
+    """
+    B, _, Hq, D = q.shape
+    n_pages, page, Hkv, _ = k_arena.shape
+    Dv = v_arena.shape[-1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+
+    def body(carry, j):
+        acc, m, l = carry
+        rows = page_table[:, j]                              # (B,)
+        safe = jnp.maximum(rows, 0)
+        kblk = jnp.take(k_arena, safe, axis=0)               # (B,page,Hkv,D)
+        vblk = jnp.take(v_arena, safe, axis=0)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        pos = j * page + jnp.arange(page, dtype=jnp.int32)
+        mask = (rows[:, None] >= 0) & (pos[None, :] < lengths[:, None])
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask[:, None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgk,bkhd->bhgd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    init = (jnp.zeros((B, Hkv, G, Dv), jnp.float32),
+            jnp.full((B, Hkv, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(
+        body, init, jnp.arange(page_table.shape[1], dtype=jnp.int32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, Hq, Dv).astype(q.dtype)
+
+
+def paged_mla_attention(
+    q_eff: Array, q_rope: Array, cc_arena: Array, cr_arena: Array,
+    page_table: Array, lengths: Array, *, softmax_scale: float,
+) -> Array:
+    """Absorbed-MLA decode over paged compressed caches.
+
+    q_eff: (B, H, kvl) fp32 (already absorbed through W_uk); q_rope:
+    (B, H, rope); arenas: (n_pages, page, kvl / rope).  Returns the fp32
+    context (B, H, kvl) — the caller applies W_uv.
+    """
+    B, H, kvl = q_eff.shape
+    page = cc_arena.shape[1]
+
+    def body(carry, j):
+        acc, m, l = carry
+        rows = page_table[:, j]
+        safe = jnp.maximum(rows, 0)
+        cc = jnp.take(cc_arena, safe, axis=0).astype(jnp.float32)
+        cr = jnp.take(cr_arena, safe, axis=0).astype(jnp.float32)
+        s = (jnp.einsum("bhk,btk->bht", q_eff, cc) +
+             jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32), cr)
+             ) * softmax_scale
+        pos = j * page + jnp.arange(page, dtype=jnp.int32)
+        mask = (rows[:, None] >= 0) & (pos[None, :] < lengths[:, None])
+        s = jnp.where(mask[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask[:, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bht,btk->bhk", p, cc)
+        return (acc_new, m_new, l_new), None
+
+    init = (jnp.zeros((B, H, kvl), jnp.float32),
+            jnp.full((B, H), NEG_INF, jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(
+        body, init, jnp.arange(page_table.shape[1], dtype=jnp.int32))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
 class KVCache(NamedTuple):
     """Per-layer-stacked KV cache. k/v: (L, B, Smax, Hkv, D)."""
     k: Array

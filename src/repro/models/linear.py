@@ -64,6 +64,46 @@ class LRPack:
                f"v={getattr(self.v, 'shape', None)})"
 
 
+@jax.tree_util.register_pytree_node_class
+class BatchLRPack:
+    """A shared weight packed with a per-batch-row stack of adapters.
+
+    The multi-tenant serving layout: one base ``w`` and projection ``v``
+    shared by every sequence in the decode batch, plus a *per-row* subspace
+    variable ``b`` — row ``i`` of the batch is answered with adapter
+    ``b[..., i, :, :]``.  The batch axis sits at position -3 (between any
+    leading layer/expert dims and the trailing ``(n_out, r)``), so slicing
+    the leading ``L`` axis under ``lax.scan`` leaves the row axis intact:
+    a scanned layer leaf ``(L, B, n, r)`` arrives in the block as
+    ``(B, n, r)`` and a stacked-expert leaf ``(L, E, B, f, r)`` as
+    ``(E, B, f, r)``.
+
+    ``w``: lead + (k, n_out); ``v``: lead + (k, r);
+    ``b``: lead + (batch, n_out, r).
+
+    Forward-only by design (serving never differentiates) — the packed
+    path routes through :func:`repro.kernels.dispatch.lowrank_batch_forward`
+    and the ``W + V Bᵀ`` merge is never materialised.
+    """
+
+    __slots__ = ("w", "b", "v")
+
+    def __init__(self, w, b, v):
+        self.w, self.b, self.v = w, b, v
+
+    def tree_flatten(self):
+        return (self.w, self.b, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):
+        return f"BatchLRPack(w={getattr(self.w, 'shape', None)}, " \
+               f"b={getattr(self.b, 'shape', None)}, " \
+               f"v={getattr(self.v, 'shape', None)})"
+
+
 @jax.custom_vjp
 def lowrank_matmul(x: Array, w: Array, b: Array, v: Array) -> Array:
     """y = x @ w + (x @ v) @ b.T with projected-residual backward.
@@ -122,9 +162,16 @@ def grad_dtype_barrier(x: Array) -> Array:
 
 
 def linear(x: Array, p, bias: Optional[Array] = None) -> Array:
-    """Apply a (possibly packed) linear map.  ``p`` is an Array or LRPack."""
+    """Apply a (possibly packed) linear map.
+
+    ``p`` is an Array, an :class:`LRPack` (one adapter for the whole
+    batch), or a :class:`BatchLRPack` (one adapter per batch row — x must
+    then be ``(batch, seq, k)`` with ``batch == p.b.shape[-3]``).
+    """
     if isinstance(p, LRPack):
         y = lowrank_matmul(x, p.w, p.b, p.v)
+    elif isinstance(p, BatchLRPack):
+        y = dispatch.lowrank_batch_forward(x, p.w, p.v, p.b)
     else:
         y = x @ p
     if bias is not None:
@@ -134,15 +181,15 @@ def linear(x: Array, p, bias: Optional[Array] = None) -> Array:
 
 def weight_of(p) -> Array:
     """The base weight regardless of packing (for shape queries)."""
-    return p.w if isinstance(p, LRPack) else p
+    return p.w if isinstance(p, (LRPack, BatchLRPack)) else p
 
 
 def effective_weight(p) -> Array:
     """Materialised W + V B^T (used by serve paths / outer merges)."""
     if isinstance(p, LRPack):
-        return (p.w.astype(jnp.float32) +
-                p.v.astype(jnp.float32) @ p.b.astype(jnp.float32).T
-                ).astype(p.w.dtype)
+        vbt = p.v.astype(jnp.float32) @ jnp.swapaxes(
+            p.b.astype(jnp.float32), -1, -2)
+        return (p.w.astype(jnp.float32) + vbt).astype(p.w.dtype)
     return p
 
 

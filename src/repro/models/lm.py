@@ -22,10 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from .attention import (KVCache, blockwise_attention, cache_update,
-                        decode_attention)
+                        decode_attention, paged_decode_attention,
+                        paged_mla_attention, paged_write)
 from .common import (ParamSpec, apply_rope, rms_norm, swiglu, tree_abstract,
                      tree_init, act_dtype, prm_dtype)
-from .linear import grad_dtype_barrier, linear, weight_of
+from .linear import (BatchLRPack, LRPack, grad_dtype_barrier, linear,
+                     weight_of)
 from .moe import moe_ffn
 from .ssm import SSMState, mamba2_mixer
 from ..sharding.ctx import constrain, divisible
@@ -228,8 +230,15 @@ def _split_heads(x, n_heads, dh):
 
 
 def attn_apply(h, p, cfg, *, pos_offset=0, cache=None, cache_index=None,
-               causal=True, decode=False):
-    """GQA attention. Returns (out, (k, v) or updated-cache-slices)."""
+               causal=True, decode=False, paged=None):
+    """GQA attention. Returns (out, (k, v) or updated-cache-slices).
+
+    ``pos_offset`` is a scalar or a per-row ``(B,)`` vector (serving:
+    sequences at different depths share one decode batch).  With
+    ``paged=(page_table, lengths)`` and ``decode=True`` the cache is a
+    pair of paged arenas ``(n_pages, page, Hkv, dh)`` instead of dense
+    ``(B, Smax, Hkv, dh)`` slices.
+    """
     B, S, d = h.shape
     dh = cfg.resolved_head_dim
     hq, hkv = cfg.num_heads, cfg.num_kv_heads
@@ -254,17 +263,27 @@ def attn_apply(h, p, cfg, *, pos_offset=0, cache=None, cache_index=None,
     if "q_norm" in p:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
-    positions = pos_offset + jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.asarray(pos_offset, jnp.int32)[..., None] + \
+        jnp.arange(S, dtype=jnp.int32)
     if cfg.rope_theta:
-        q = apply_rope(q, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
-        k = apply_rope(k, jnp.broadcast_to(positions, (B, S)), cfg.rope_theta)
+        posb = jnp.broadcast_to(positions, (B, S))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
 
     new_kv = None
     if decode:
-        ck, cv = cache  # (B, Smax, Hkv, dh)
-        ck, cv = cache_update(ck, cv, k, v, cache_index)
-        out = decode_attention(q, ck, cv, cache_index + S)
-        new_kv = (ck, cv)
+        if paged is not None:
+            pt, lengths = paged
+            ck, cv = cache  # arenas (n_pages, page, Hkv, dh)
+            ck = paged_write(ck, k, pt, lengths)
+            cv = paged_write(cv, v, pt, lengths)
+            out = paged_decode_attention(q, ck, cv, pt, lengths + 1)
+            new_kv = (ck, cv)
+        else:
+            ck, cv = cache  # (B, Smax, Hkv, dh)
+            ck, cv = cache_update(ck, cv, k, v, cache_index)
+            out = decode_attention(q, ck, cv, cache_index + S)
+            new_kv = (ck, cv)
     else:
         from ..sharding.ctx import get_mesh
         cp = 1
@@ -285,20 +304,60 @@ def attn_apply(h, p, cfg, *, pos_offset=0, cache=None, cache_index=None,
     return out, new_kv
 
 
+def _uk_absorb(q32, p, h, nope):
+    """Absorb q_nope through W_uk lazily: (B,H,nope) fp32 -> (B,H,kvl).
+
+    With a packed ``p`` the low-rank correction is applied in rank-r form
+    — ``W_uk + V Bᵀ`` is never materialised, matching the lazy serving
+    contract of the decode program.
+    """
+    w = weight_of(p).astype(jnp.float32).reshape(-1, h, nope)
+    y = jnp.einsum("bhn,khn->bhk", q32, w)
+    if isinstance(p, (LRPack, BatchLRPack)):
+        v32 = p.v.astype(jnp.float32)
+        if isinstance(p, BatchLRPack):
+            b4 = p.b.astype(jnp.float32).reshape(
+                p.b.shape[-3], h, nope, -1)
+            t = jnp.einsum("bhn,bhnr->bhr", q32, b4)
+        else:
+            b3 = p.b.astype(jnp.float32).reshape(h, nope, -1)
+            t = jnp.einsum("bhn,hnr->bhr", q32, b3)
+        y = y + jnp.einsum("bhr,kr->bhk", t, v32)
+    return y
+
+
+def _uv_absorb(ctx, p, h, vd):
+    """Absorb the fp32 context through W_uv lazily: (B,H,kvl) -> (B,H,vd)."""
+    w = weight_of(p).astype(jnp.float32).reshape(-1, h, vd)
+    y = jnp.einsum("bhk,khv->bhv", ctx, w)
+    if isinstance(p, (LRPack, BatchLRPack)):
+        t = jnp.einsum("bhk,kr->bhr", ctx, p.v.astype(jnp.float32))
+        if isinstance(p, BatchLRPack):
+            b4 = p.b.astype(jnp.float32).reshape(p.b.shape[-3], h, vd, -1)
+            y = y + jnp.einsum("bhr,bhvr->bhv", t, b4)
+        else:
+            b3 = p.b.astype(jnp.float32).reshape(h, vd, -1)
+            y = y + jnp.einsum("bhr,hvr->bhv", t, b3)
+    return y
+
+
 def mla_apply(h, p, cfg, *, pos_offset=0, cache=None, cache_index=None,
-              decode=False):
+              decode=False, paged=None):
     """Multi-head latent attention (deepseek-v2).
 
     Train/prefill: expand K/V, blockwise attention.
     Decode: absorbed form over the *compressed* cache
-    (c_kv: (B,Smax,kv_lora), k_rope: (B,Smax,rope)).
+    (c_kv: (B,Smax,kv_lora), k_rope: (B,Smax,rope)); with
+    ``paged=(page_table, lengths)`` the cache is a pair of 4-D arenas
+    ``(n_pages, page, 1, kvl)`` / ``(n_pages, page, 1, rope)``.
     """
     B, S, d = h.shape
     hq = cfg.num_heads
     nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvl = cfg.kv_lora_rank
     scale = (nope + rope) ** -0.5
-    positions = pos_offset + jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.asarray(pos_offset, jnp.int32)[..., None] + \
+        jnp.arange(S, dtype=jnp.int32)
     posb = jnp.broadcast_to(positions, (B, S))
 
     cq = rms_norm(linear(h, p["w_dq"]), p["q_norm"], cfg.norm_eps)
@@ -313,8 +372,9 @@ def mla_apply(h, p, cfg, *, pos_offset=0, cache=None, cache_index=None,
                         cfg.rope_theta)[:, :, 0, :]        # (B,S,rope)
 
     # generic KVCache stores MLA caches as (B, Smax, 1, dim) — normalise.
+    # (paged arenas are 4-D too but keep their head axis for paged_write.)
     squeeze_head = False
-    if cache is not None and cache[0].ndim == 4:
+    if cache is not None and paged is None and cache[0].ndim == 4:
         cache = (cache[0][:, :, 0, :], cache[1][:, :, 0, :])
         squeeze_head = True
 
@@ -324,26 +384,35 @@ def mla_apply(h, p, cfg, *, pos_offset=0, cache=None, cache_index=None,
         return (cc, cr)
 
     if decode:
-        cc, cr = cache                                     # compressed cache
-        cc = jax.lax.dynamic_update_slice(
-            cc, c_kv.astype(cc.dtype), (0, cache_index, 0))
-        cr = jax.lax.dynamic_update_slice(
-            cr, k_rope.astype(cr.dtype), (0, cache_index, 0))
         # absorbed attention: q_eff[b,h,:] = W_uk[h] @ q_nope[b,h,:]
-        w_uk = weight_of(p["w_uk"]).reshape(kvl, hq, nope)
-        q_eff = jnp.einsum("bhn,khn->bhk", q_nope[:, 0].astype(jnp.float32),
-                           w_uk.astype(jnp.float32))       # (B,H,kvl)
-        s = (jnp.einsum("bhk,btk->bht", q_eff, cc.astype(jnp.float32)) +
-             jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(jnp.float32),
-                        cr.astype(jnp.float32))) * scale
-        valid = jnp.arange(cc.shape[1]) < (cache_index + S)
-        s = jnp.where(valid[None, None, :], s, -1e30)
-        pattn = jax.nn.softmax(s, axis=-1)
-        ctx = jnp.einsum("bht,btk->bhk", pattn, cc.astype(jnp.float32))
-        w_uv = weight_of(p["w_uv"]).reshape(kvl, hq, vd)
-        out = jnp.einsum("bhk,khv->bhv", ctx, w_uv.astype(jnp.float32))
+        # (lazy low-rank correction applied inside _uk_absorb/_uv_absorb)
+        q_eff = _uk_absorb(q_nope[:, 0].astype(jnp.float32), p["w_uk"],
+                           hq, nope)                       # (B,H,kvl)
+        if paged is not None:
+            pt, lengths = paged
+            cc_a, cr_a = cache          # (n_pages, page, 1, kvl / rope)
+            cc_a = paged_write(cc_a, c_kv, pt, lengths)
+            cr_a = paged_write(cr_a, k_rope, pt, lengths)
+            ctx = paged_mla_attention(
+                q_eff, q_rope[:, 0], cc_a[:, :, 0, :], cr_a[:, :, 0, :],
+                pt, lengths + 1, softmax_scale=scale)
+            new_cache = (cc_a, cr_a)
+        else:
+            cc, cr = cache                                 # compressed cache
+            cc = jax.lax.dynamic_update_slice(
+                cc, c_kv.astype(cc.dtype), (0, cache_index, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cr, k_rope.astype(cr.dtype), (0, cache_index, 0))
+            s = (jnp.einsum("bhk,btk->bht", q_eff, cc.astype(jnp.float32)) +
+                 jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(jnp.float32),
+                            cr.astype(jnp.float32))) * scale
+            valid = jnp.arange(cc.shape[1]) < (cache_index + S)
+            s = jnp.where(valid[None, None, :], s, -1e30)
+            pattn = jax.nn.softmax(s, axis=-1)
+            ctx = jnp.einsum("bht,btk->bhk", pattn, cc.astype(jnp.float32))
+            new_cache = _rewrap(cc, cr)
+        out = _uv_absorb(ctx, p["w_uv"], hq, vd)
         out = out.reshape(B, 1, hq * vd).astype(h.dtype)
-        new_cache = _rewrap(cc, cr)
     else:
         k_nope = constrain(_split_heads(linear(c_kv, p["w_uk"]), hq, nope),
                            "batch", None, "tp", None)
@@ -769,3 +838,188 @@ def prefill(params, tokens, cfg, state: DecodeState, extra_embeds=None):
     # pos counts *all* cached positions, including a vlm/audio prefix.
     return last, DecodeState(new_kv, new_ssm, new_shared,
                              jnp.asarray(h.shape[1], jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Serving: paged decode state (shared page arena across ragged sequences)
+# ---------------------------------------------------------------------------
+
+class PagedDecodeState(NamedTuple):
+    """Per-slot paged decode caches (serving engine).
+
+    ``kv_k`` / ``kv_v``: ``(L, n_pages, page, H, D)`` arenas (MLA stores
+    the compressed ``c_kv`` / ``k_rope`` with ``H == 1``).  ``ssm``:
+    slot-indexed :class:`SSMState` — recurrent state is O(1) per slot, so
+    it is not paged.  ``shared_k`` / ``shared_v``: hybrid shared-attention
+    arenas ``(n_attn_apps, n_pages, page, Hkv, dh)``.  ``page_table``:
+    ``(batch, max_pages)`` int32, ``-1`` = unmapped; ONE page-id space is
+    shared by every layer (page p holds the same token range everywhere).
+    ``lengths``: ``(batch,)`` int32 tokens stored per slot; ``0`` marks an
+    inactive slot (all its arena writes drop, its logits are ignored).
+    """
+    kv_k: Optional[Array]
+    kv_v: Optional[Array]
+    ssm: Optional[SSMState]
+    shared_k: Optional[Array]
+    shared_v: Optional[Array]
+    page_table: Array
+    lengths: Array
+
+
+def alloc_paged_state(cfg, batch: int, num_pages: int, page_size: int,
+                      max_len: int, abstract: bool = False
+                      ) -> PagedDecodeState:
+    """Allocate paged decode arenas: ``num_pages`` pages of ``page_size``
+    tokens shared by up to ``batch`` concurrent sequences of at most
+    ``max_len`` tokens each."""
+    dt = act_dtype(cfg)
+    fam = cfg.family
+    max_pages = -(-max_len // page_size)
+
+    def mk(shape, dtype=dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    kv_k = kv_v = ssm = sk = sv = None
+    if fam in ("dense", "vlm", "audio", "moe"):
+        if cfg.use_mla:
+            kv_k = mk((cfg.num_layers, num_pages, page_size, 1,
+                       cfg.kv_lora_rank))
+            kv_v = mk((cfg.num_layers, num_pages, page_size, 1,
+                       cfg.qk_rope_dim))
+        else:
+            shp = (cfg.num_layers, num_pages, page_size,
+                   cfg.num_kv_heads, cfg.resolved_head_dim)
+            kv_k, kv_v = mk(shp), mk(shp)
+    if fam in ("ssm", "hybrid"):
+        g = max(1, getattr(cfg, "ssm_groups", 1))
+        conv_ch = cfg.ssm_d_inner + 2 * g * cfg.ssm_state
+        mks = SSMState.abstract if abstract else SSMState.alloc
+        ssm = mks(cfg.num_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                  cfg.ssm_head_dim, cfg.ssm_conv_dim, conv_ch, dtype=dt)
+        if cfg.attn_every:
+            shp = (_n_attn_apps(cfg), num_pages, page_size,
+                   cfg.num_kv_heads, cfg.resolved_head_dim)
+            sk, sv = mk(shp), mk(shp)
+    if abstract:
+        pt = jax.ShapeDtypeStruct((batch, max_pages), jnp.int32)
+        ln = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    else:
+        pt = jnp.full((batch, max_pages), -1, jnp.int32)
+        ln = jnp.zeros((batch,), jnp.int32)
+    return PagedDecodeState(kv_k, kv_v, ssm, sk, sv, pt, ln)
+
+
+def decode_step_paged(params, token, cfg, state: PagedDecodeState,
+                      extra_embeds=None):
+    """One-token decode over paged caches. token: (B, 1) int32.
+
+    Slot ``b``'s new token lands at position ``lengths[b]`` of its page
+    chain; rows with ``lengths == 0`` are inactive — their cache writes
+    scatter out of bounds (dropped) and their logits are finite garbage
+    the engine never reads.  Because every per-slot operation (rope
+    offsets, page-chain scan order, scatter targets) is row-local, a
+    sequence decoded inside a mixed batch is bit-identical to the same
+    sequence decoded solo (fp32).
+    """
+    h = _embed(params, token, cfg, extra_embeds)
+    pt, lengths = state.page_table, state.lengths
+    fam = cfg.family
+    new_kk, new_kv_ = state.kv_k, state.kv_v
+    new_ssm = state.ssm
+    new_sk, new_sv = state.shared_k, state.shared_v
+
+    if cfg.first_dense_layers:
+        # unscanned leading layers use arena slots [0:first_dense_layers]
+        def d0_body(h, xs):
+            lp, ck, cv = xs
+            ap = mla_apply if cfg.use_mla else attn_apply
+            a, kvs = ap(rms_norm(h, lp["ln1"], cfg.norm_eps), lp["attn"],
+                        cfg, pos_offset=lengths, cache=(ck, cv),
+                        decode=True, paged=(pt, lengths))
+            h = h + a
+            h = h + mlp_apply(rms_norm(h, lp["ln2"], cfg.norm_eps),
+                              lp["mlp"], cfg)
+            return h, kvs
+        nfd = cfg.first_dense_layers
+        h, kvs = jax.lax.scan(
+            d0_body, h,
+            (params["dense_layers"], state.kv_k[:nfd], state.kv_v[:nfd]))
+        new_kk = jax.lax.dynamic_update_slice_in_dim(new_kk, kvs[0], 0, 0)
+        new_kv_ = jax.lax.dynamic_update_slice_in_dim(new_kv_, kvs[1], 0, 0)
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        off = cfg.first_dense_layers
+
+        def body(h, xs):
+            lp, ck, cv = xs
+            blk = moe_block if fam == "moe" else dense_block
+            h, kvs, _ = blk(h, lp, cfg, pos_offset=lengths,
+                            cache=(ck, cv), decode=True,
+                            paged=(pt, lengths))
+            return h, kvs
+        h, kvs = jax.lax.scan(
+            body, h, (params["layers"], state.kv_k[off:], state.kv_v[off:]))
+        new_kk = jax.lax.dynamic_update_slice_in_dim(new_kk, kvs[0], off, 0)
+        new_kv_ = jax.lax.dynamic_update_slice_in_dim(new_kv_, kvs[1], off, 0)
+    elif fam in ("ssm", "hybrid"):
+        shared = params.get("shared_attn")
+
+        def mamba_step(h, xs):
+            lp, s_ssm, s_conv = xs
+            m, (ns, nc) = mamba2_mixer(
+                rms_norm(h, lp["ln1"], cfg.norm_eps), lp["ssm"], cfg,
+                ssm_state=s_ssm, conv_state=s_conv, decode=True)
+            return h + m, (ns, nc)
+
+        if shared is not None and cfg.attn_every:
+            ae = cfg.attn_every
+            ng = cfg.num_layers // ae
+            main_p, tail_p = _group_layers(params["layers"], ae, ng)
+
+            def regroup(x):
+                return (x[:ng * ae].reshape((ng, ae) + x.shape[1:]),
+                        x[ng * ae:])
+
+            ssm_m, ssm_t = regroup(state.ssm.ssm)
+            conv_m, conv_t = regroup(state.ssm.conv)
+
+            def group_body(h, xs):
+                gp, gs, gc, ck, cv = xs
+                h, (ns, nc) = jax.lax.scan(mamba_step, h, (gp, gs, gc))
+                a, (nk, nv) = attn_apply(
+                    rms_norm(h, shared["ln1"], cfg.norm_eps),
+                    shared["attn"], cfg, pos_offset=lengths,
+                    cache=(ck, cv), decode=True, paged=(pt, lengths))
+                h = h + a
+                h = h + mlp_apply(rms_norm(h, shared["ln2"], cfg.norm_eps),
+                                  shared["mlp"], cfg)
+                return h, (ns, nc, nk, nv)
+
+            h, (ns_m, nc_m, nk, nv) = jax.lax.scan(
+                group_body, h,
+                (main_p, ssm_m, conv_m, state.shared_k, state.shared_v))
+            ns_all = ns_m.reshape((ng * ae,) + ns_m.shape[2:])
+            nc_all = nc_m.reshape((ng * ae,) + nc_m.shape[2:])
+            if cfg.num_layers % ae:
+                h, (ns_t, nc_t) = jax.lax.scan(
+                    mamba_step, h, (tail_p, ssm_t, conv_t))
+                ns_all = jnp.concatenate([ns_all, ns_t], axis=0)
+                nc_all = jnp.concatenate([nc_all, nc_t], axis=0)
+            new_ssm = SSMState(ssm=ns_all, conv=nc_all)
+            new_sk, new_sv = nk, nv
+        else:
+            h, (ns, nc) = jax.lax.scan(
+                mamba_step, h,
+                (params["layers"], state.ssm.ssm, state.ssm.conv))
+            new_ssm = SSMState(ssm=ns, conv=nc)
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    lg = logits(params, h, cfg)
+    active = lengths > 0
+    new_len = jnp.where(active, lengths + 1, 0)
+    return lg, PagedDecodeState(new_kk, new_kv_, new_ssm, new_sk, new_sv,
+                                pt, new_len)

@@ -23,7 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .linear import linear, weight_of
+from .linear import BatchLRPack, linear, weight_of
 from ..sharding.ctx import constrain
 
 Array = jax.Array
@@ -52,6 +52,14 @@ def moe_ffn(x: Array, router_w, w_gate, w_up, w_down, *,
     """
     B, S, d = x.shape
     T = B * S
+    if groups > 1 and T % groups == 0 and any(
+            isinstance(w, BatchLRPack)
+            for w in (router_w, w_gate, w_up, w_down)):
+        # grouped dispatch folds tokens across batch rows, losing the
+        # token -> batch-row map the per-row adapters key on
+        raise ValueError(
+            "moe_ffn: groups > 1 is incompatible with per-row adapters "
+            "(BatchLRPack) — serve MoE cells with moe_groups=1")
     if groups > 1 and T % groups == 0:
         xg = constrain(x.reshape(groups, T // groups, 1, d),
                        "batch", None, None, None)
@@ -100,6 +108,17 @@ def moe_ffn(x: Array, router_w, w_gate, w_up, w_down, *,
             return jnp.einsum("ecd,edf->ecf", h, w)
         # LRPack with per-expert stacked b/v: y = h w + (h v) b^T
         p = jnp.einsum("ecd,edr->ecr", h, w.v)
+        if isinstance(w, BatchLRPack):
+            # per-row adapters: w.b is (E, batch, f, r); every (expert,
+            # capacity-slot) pair applies the adapter of the batch row its
+            # token came from.  Sentinel slots (table == T) gathered the
+            # zero row, so p is zero there and the clamped row pick is
+            # irrelevant.
+            rows = jnp.minimum(table // S, B - 1)              # (E, C)
+            bsel = jnp.take_along_axis(
+                w.b, rows[:, :, None, None], axis=1)           # (E,C,f,r)
+            return jnp.einsum("ecd,edf->ecf", h, w.w) + \
+                jnp.einsum("ecr,ecfr->ecf", p, bsel)
         return jnp.einsum("ecd,edf->ecf", h, w.w) + \
             jnp.einsum("ecr,efr->ecf", p, w.b)
 

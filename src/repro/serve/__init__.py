@@ -1,0 +1,17 @@
+"""Multi-tenant low-rank serving: continuous batching over a paged decode
+cache, with per-tenant ``B`` adapters served lazily as ``W + V Bᵀ``
+through the fused low-rank forward (the merge is never materialised).
+
+Entry points:
+  :class:`Engine` / :class:`EngineConfig` / :class:`Request` — the loop;
+  :class:`AdapterStore` — per-tenant (B, V) loaded from training
+  checkpoints; :class:`PagePool` — the host-side page free list.
+"""
+from .adapters import (ADAPTER_METHODS, AdapterMismatchError, AdapterStore,
+                       batched_pack_tree)
+from .engine import Engine, EngineConfig, Request
+from .pages import PagePool
+
+__all__ = ["ADAPTER_METHODS", "AdapterMismatchError", "AdapterStore",
+           "batched_pack_tree", "Engine", "EngineConfig", "PagePool",
+           "Request"]

@@ -1,0 +1,417 @@
+"""Continuous-batching serving engine over the paged decode cache.
+
+One fixed-size decode batch of ``max_batch`` slots is stepped in
+lock-step; sequences join (prefill + page-chain allocation) and leave
+(evict, pages freed) between steps, so the jitted decode program is traced
+once and reused for the whole workload.  The per-step loop is:
+
+  1. evict finished slots (the only device->host sync: one output-row
+     fetch per finished sequence);
+  2. admit queued requests while a slot AND their whole page chain are
+     available (all-or-nothing admission — the backpressure signal);
+  3. grow page chains for slots whose next token starts a fresh page,
+     preempting the youngest other sequence (recompute-on-readmit, the
+     vLLM discipline) when the pool runs dry;
+  4. run one batched decode step: every active slot advances one token,
+     all tenants answered by one fused ``W + V Bᵀ`` low-rank forward —
+     the merge is never materialised, argmax stays on device.
+
+Inactive slots ride along with ``lengths == 0``: their cache writes
+scatter out of bounds (dropped) and their logits are never read.  Because
+every per-slot operation is row-local and page-chain scan order is
+deterministic, a sequence decoded inside a mixed batch is bit-identical
+to the same sequence decoded alone (fp32, barring preemption — a
+preempted sequence re-enters through prefill, which is a different but
+still exact program).
+
+Knobs (see docs/knobs.md): REPRO_SERVE_PAGE_SIZE, REPRO_SERVE_MAX_BATCH,
+REPRO_SERVE_NUM_PAGES, REPRO_SERVE_MAX_LEN.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from ..models.lm import (DecodeState, PagedDecodeState, alloc_decode_state,
+                         alloc_paged_state, decode_step_paged, prefill)
+from .adapters import AdapterStore, batched_pack_tree
+from .pages import PagePool
+
+Array = jax.Array
+
+
+def _env_int(name: str, default: int) -> int:
+    v = os.environ.get(name)
+    return int(v) if v else default
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine geometry (jit shape keys — fixed for a run)."""
+    page_size: int = 16       # tokens per cache page
+    max_batch: int = 4        # decode slots stepped in lock-step
+    num_pages: int = 0        # 0 -> max_batch * ceil(max_len / page_size)
+    max_len: int = 256        # per-sequence cap (page-table width)
+    max_out: int = 128        # widest max_new a request may ask for
+
+    @classmethod
+    def from_env(cls, **over) -> "EngineConfig":
+        base = dict(
+            page_size=_env_int("REPRO_SERVE_PAGE_SIZE", cls.page_size),
+            max_batch=_env_int("REPRO_SERVE_MAX_BATCH", cls.max_batch),
+            num_pages=_env_int("REPRO_SERVE_NUM_PAGES", cls.num_pages),
+            max_len=_env_int("REPRO_SERVE_MAX_LEN", cls.max_len),
+        )
+        base.update(over)
+        return cls(**base)
+
+    def resolved_num_pages(self) -> int:
+        if self.num_pages:
+            return self.num_pages
+        return self.max_batch * (-(-self.max_len // self.page_size))
+
+
+class Request:
+    """One generation request.
+
+    ``prompt``: 1-D int32 token ids; ``max_new``: tokens to generate
+    (includes the one produced by prefill); ``tenant``: adapter name in
+    the engine's store (``None`` -> base weights / tenant slot 0);
+    ``extra_embeds``: optional ``(1, P, d)`` prefix (vlm vision tokens).
+    """
+
+    __slots__ = ("rid", "prompt", "max_new", "tenant", "extra_embeds")
+
+    def __init__(self, rid, prompt, max_new: int, tenant: Optional[str] = None,
+                 extra_embeds=None):
+        self.rid = rid
+        self.prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.max_new = int(max_new)
+        self.tenant = tenant
+        self.extra_embeds = extra_embeds
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+
+class Engine:
+    """Multi-tenant continuous-batching engine for one model config."""
+
+    def __init__(self, params, cfg, *, adapters: Optional[AdapterStore] = None,
+                 engine_cfg: Optional[EngineConfig] = None):
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "encoder-decoder serving (cross-attention caches) is not "
+                "supported by the paged engine")
+        self.params = params
+        self.cfg = cfg
+        self.adapters = adapters
+        self.ecfg = engine_cfg or EngineConfig.from_env()
+        ec = self.ecfg
+        self.num_pages = ec.resolved_num_pages()
+        self.max_pages = -(-ec.max_len // ec.page_size)
+        self.pool = PagePool(self.num_pages, ec.page_size)
+        self.state: PagedDecodeState = alloc_paged_state(
+            cfg, ec.max_batch, self.num_pages, ec.page_size, ec.max_len)
+        # host mirrors (authoritative for page_table / lengths)
+        self._pt = np.full((ec.max_batch, self.max_pages), -1, np.int32)
+        self._len = np.zeros((ec.max_batch,), np.int32)
+        self._slot_tenant = np.zeros((ec.max_batch,), np.int32)
+        self._slots: List[Optional[dict]] = [None] * ec.max_batch
+        self._queue: deque = deque()
+        self._outputs: Dict = {}
+        self._partial: Dict = {}
+        self._admit_seq = 0
+        self._traces = 0          # decode trace counter (hot-swap test)
+        self._prefill_cache: Dict = {}
+        # device-resident decode ring: current token, output ring, counts
+        self._tok = jnp.zeros((ec.max_batch, 1), jnp.int32)
+        self._out = jnp.zeros((ec.max_batch, ec.max_out), jnp.int32)
+        self._counts = jnp.zeros((ec.max_batch,), jnp.int32)
+        self._decode_jit = self._build_decode()
+
+    @property
+    def traces(self) -> int:
+        """How many times the batched decode step has been traced (1 after
+        the first step; hot-swapping adapters must not grow this)."""
+        return self._traces
+
+    # -- jitted programs --------------------------------------------------
+
+    def _decode_core(self, packed, state, tok, out, counts):
+        active = state.lengths > 0
+        lg, nstate = decode_step_paged(packed, tok, self.cfg, state)
+        nxt = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+        # inactive rows scatter out of bounds (dropped)
+        idx = jnp.where(active, counts, out.shape[1])
+        out = out.at[jnp.arange(out.shape[0]), idx].set(nxt, mode="drop")
+        counts = counts + active.astype(jnp.int32)
+        tok = jnp.where(active[:, None], nxt[:, None], tok)
+        return nstate, tok, out, counts
+
+    def _build_decode(self):
+        if self.adapters is not None:
+            layout = self.adapters.layout
+
+            def fn(params, b_fulls, projs, tenants, state, tok, out, counts):
+                self._traces += 1
+                packed = batched_pack_tree(params, layout, b_fulls, projs,
+                                           tenants)
+                return self._decode_core(packed, state, tok, out, counts)
+            return jax.jit(fn, donate_argnums=(4, 5, 6, 7))
+
+        def fn(params, state, tok, out, counts):
+            self._traces += 1
+            return self._decode_core(params, state, tok, out, counts)
+        return jax.jit(fn, donate_argnums=(1, 2, 3, 4))
+
+    def _decode_args(self, state):
+        if self.adapters is not None:
+            return (self.params, tuple(self.adapters.b_full),
+                    tuple(self.adapters.projs),
+                    jnp.asarray(self._slot_tenant), state, self._tok,
+                    self._out, self._counts)
+        return (self.params, state, self._tok, self._out, self._counts)
+
+    def decode_jaxpr(self):
+        """Closed jaxpr of the batched decode step (lazy-merge assertion)."""
+        state = self.state._replace(page_table=jnp.asarray(self._pt),
+                                    lengths=jnp.asarray(self._len))
+        args = self._decode_args(state)
+        if self.adapters is not None:
+            layout = self.adapters.layout
+
+            def raw(params, b_fulls, projs, tenants, state, tok, out, cnt):
+                packed = batched_pack_tree(params, layout, b_fulls, projs,
+                                           tenants)
+                return self._decode_core(packed, state, tok, out, cnt)
+        else:
+            def raw(params, state, tok, out, cnt):
+                return self._decode_core(params, state, tok, out, cnt)
+        return jax.make_jaxpr(raw)(*args)
+
+    def _get_prefill(self, s_total: int, n_pages: int, prefix: int):
+        key = (s_total, n_pages, prefix)
+        if key in self._prefill_cache:
+            return self._prefill_cache[key]
+        cfg = self.cfg
+        cap = n_pages * self.ecfg.page_size
+
+        def fn(packed, tokens, extra, state, pages, slot):
+            tmp: DecodeState = alloc_decode_state(cfg, 1, cap)
+            lg, tmp = prefill(packed, tokens, cfg, tmp, extra_embeds=extra)
+            nxt = jnp.argmax(lg[0, -1]).astype(jnp.int32)
+
+            def scatter(arena, cache):
+                # (L, 1, cap, H, D) -> (L, nP, page, H, D) -> arena pages
+                l_ = cache.shape[0]
+                blocks = cache[:, 0].reshape(
+                    (l_, n_pages, self.ecfg.page_size) + cache.shape[3:])
+                return arena.at[:, pages].set(blocks.astype(arena.dtype))
+
+            new = state
+            if tmp.kv is not None:
+                new = new._replace(kv_k=scatter(new.kv_k, tmp.kv.k),
+                                   kv_v=scatter(new.kv_v, tmp.kv.v))
+            if tmp.ssm is not None:
+                new = new._replace(ssm=new.ssm._replace(
+                    ssm=new.ssm.ssm.at[:, slot].set(
+                        tmp.ssm.ssm[:, 0].astype(new.ssm.ssm.dtype)),
+                    conv=new.ssm.conv.at[:, slot].set(
+                        tmp.ssm.conv[:, 0].astype(new.ssm.conv.dtype))))
+            if tmp.shared_kv is not None:
+                new = new._replace(
+                    shared_k=scatter(new.shared_k, tmp.shared_kv.k),
+                    shared_v=scatter(new.shared_v, tmp.shared_kv.v))
+            return nxt, new
+
+        jitted = jax.jit(fn, donate_argnums=(3,))
+        self._prefill_cache[key] = jitted
+        return jitted
+
+    # -- host-side bookkeeping --------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_new > self.ecfg.max_out:
+            raise ValueError(
+                f"request {req.rid!r}: max_new={req.max_new} exceeds the "
+                f"engine's max_out={self.ecfg.max_out}")
+        prefix = 0 if req.extra_embeds is None else req.extra_embeds.shape[1]
+        if len(req.prompt) + prefix + req.max_new - 1 > self.ecfg.max_len:
+            raise ValueError(
+                f"request {req.rid!r}: prompt+prefix+max_new "
+                f"{len(req.prompt) + prefix + req.max_new} exceeds "
+                f"max_len={self.ecfg.max_len}")
+        if self.adapters is not None:
+            if req.tenant is None:
+                raise ValueError(
+                    f"request {req.rid!r}: engine has an adapter store — "
+                    f"requests must name a tenant")
+            if req.tenant not in self.adapters._tenants:
+                raise KeyError(f"unknown tenant {req.tenant!r}")
+        self._queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    def _fetch_row(self, slot: int) -> np.ndarray:
+        n = self._slots[slot]["generated"]
+        return np.asarray(self._out[slot])[:n].astype(np.int32)
+
+    def _release(self, slot: int) -> None:
+        meta = self._slots[slot]
+        self.pool.release(meta["pages"])
+        self._pt[slot, :] = -1
+        self._len[slot] = 0
+        self._slot_tenant[slot] = 0
+        self._slots[slot] = None
+
+    def _evict_finished(self) -> None:
+        for slot in self._active_slots():
+            meta = self._slots[slot]
+            done = meta["generated"] >= meta["max_new"]
+            capped = int(self._len[slot]) >= self.ecfg.max_len
+            if done or capped:
+                row = self._fetch_row(slot)
+                prior = self._partial.pop(meta["rid"], None)
+                if prior is not None:
+                    row = np.concatenate([prior, row])
+                self._outputs[meta["rid"]] = row
+                self._release(slot)
+
+    def _preempt(self, slot: int) -> None:
+        meta = self._slots[slot]
+        row = self._fetch_row(slot)
+        prior = self._partial.pop(meta["rid"], None)
+        full = row if prior is None else np.concatenate([prior, row])
+        if meta["generated"] >= meta["max_new"]:
+            # already done — finishing beats recomputing
+            self._outputs[meta["rid"]] = full
+            self._release(slot)
+            return
+        self._partial[meta["rid"]] = full
+        # recompute-on-readmit: the prompt grows by what this residency
+        # generated, the remaining budget shrinks by the same amount
+        req = Request(meta["rid"], np.concatenate([meta["prompt"], row]),
+                      meta["max_new"] - meta["generated"],
+                      tenant=meta["tenant"],
+                      extra_embeds=meta["extra_embeds"])
+        self._release(slot)
+        self._queue.appendleft(req)
+
+    def _admit(self) -> None:
+        while self._queue:
+            req = self._queue[0]
+            slot = self._free_slot()
+            if slot is None:
+                return
+            prefix = 0 if req.extra_embeds is None \
+                else req.extra_embeds.shape[1]
+            s_total = len(req.prompt) + prefix
+            need = self.pool.pages_for(s_total)
+            pages = self.pool.alloc(need)
+            if pages is None:
+                if not self._active_slots() and \
+                        self.pool.available == self.num_pages:
+                    raise RuntimeError(
+                        f"request {req.rid!r} needs {need} pages but the "
+                        f"pool only has {self.num_pages}; raise "
+                        f"REPRO_SERVE_NUM_PAGES")
+                return  # backpressure: wait for evictions
+            self._queue.popleft()
+            tenant_idx = 0
+            packed = self.params
+            if self.adapters is not None:
+                tenant_idx = self.adapters.tenant_index(req.tenant)
+                packed = self.adapters.lrpack_tree(self.params, req.tenant)
+            fn = self._get_prefill(s_total, need, prefix)
+            extra = None if req.extra_embeds is None \
+                else jnp.asarray(req.extra_embeds)
+            nxt, self.state = fn(
+                packed, jnp.asarray(req.prompt[None, :]), extra, self.state,
+                jnp.asarray(np.asarray(pages, np.int32)),
+                jnp.asarray(slot, jnp.int32))
+            self._pt[slot, :] = -1
+            self._pt[slot, :need] = pages
+            self._len[slot] = s_total
+            self._slot_tenant[slot] = tenant_idx
+            self._tok = self._tok.at[slot, 0].set(nxt)
+            self._out = self._out.at[slot].set(0).at[slot, 0].set(nxt)
+            self._counts = self._counts.at[slot].set(1)
+            self._slots[slot] = {
+                "rid": req.rid, "prompt": req.prompt,
+                "max_new": req.max_new, "generated": 1,
+                "tenant": req.tenant, "extra_embeds": req.extra_embeds,
+                "pages": list(pages), "seq": self._admit_seq,
+            }
+            self._admit_seq += 1
+
+    def _ensure_pages(self) -> None:
+        for slot in sorted(self._active_slots(),
+                           key=lambda s: self._slots[s]["seq"]):
+            meta = self._slots[slot]
+            if meta is None:
+                continue
+            pos = int(self._len[slot])
+            if pos % self.ecfg.page_size != 0:
+                continue  # current page still has room
+            pidx = pos // self.ecfg.page_size
+            if pidx >= self.max_pages:
+                continue  # at max_len; evicted next cycle
+            got = self.pool.alloc(1)
+            while got is None:
+                victims = [s for s in self._active_slots() if s != slot]
+                if not victims:
+                    raise RuntimeError(
+                        "page pool exhausted with a single active "
+                        "sequence; raise REPRO_SERVE_NUM_PAGES")
+                victim = max(victims, key=lambda s: self._slots[s]["seq"])
+                self._preempt(victim)
+                got = self.pool.alloc(1)
+            self._pt[slot, pidx] = got[0]
+            meta["pages"].append(got[0])
+
+    # -- the engine loop --------------------------------------------------
+
+    def step(self) -> bool:
+        """One engine iteration. Returns True if any work remains."""
+        self._evict_finished()
+        self._admit()
+        active = self._active_slots()
+        if not active:
+            if self._queue:
+                raise RuntimeError(
+                    "queued requests cannot be admitted (page pool or "
+                    "batch too small) and nothing is running")
+            return False
+        self._ensure_pages()
+        # _ensure_pages may have preempted; re-check who is still active
+        active = self._active_slots()
+        state = self.state._replace(page_table=jnp.asarray(self._pt),
+                                    lengths=jnp.asarray(self._len))
+        res = self._decode_jit(*self._decode_args(state))
+        self.state, self._tok, self._out, self._counts = res
+        for slot in active:
+            self._slots[slot]["generated"] += 1
+            self._len[slot] += 1
+        return True
+
+    def run(self) -> Dict:
+        """Drain the queue; returns {rid: np.int32 generated tokens}."""
+        while self._queue or self._active_slots():
+            self.step()
+        self._evict_finished()
+        out, self._outputs = self._outputs, {}
+        return out

@@ -354,6 +354,41 @@ def state_pspecs(mesh: Mesh, specs, state) -> Any:
         key=P(), layout=state.layout)
 
 
+def serve_state_pspecs(mesh: Mesh, state) -> Any:
+    """PartitionSpecs for a serving :class:`~repro.models.lm.
+    PagedDecodeState`.
+
+    The page arenas ``(L, n_pages, page, H, D)`` shard their head axis
+    over ``model`` when divisible (the same tensor-parallel split the
+    attention weights use, so paged reads/writes stay local to the head
+    shard); MLA's single-latent-head arenas fall back to replication by
+    the divisibility rule.  SSM recurrent state shards its heads, the
+    conv window its channel axis.  The page table and lengths are tiny
+    host-authored int32 vectors — always replicated, every shard needs
+    the full routing view.
+    """
+    from ..models import lm as _lm
+    tp = mesh.shape.get("model", 1)
+
+    def _split(a, axis):
+        if a is None:
+            return None
+        parts = [None] * len(a.shape)
+        if tp > 1 and a.shape[axis] % tp == 0 and a.shape[axis] >= tp:
+            parts[axis] = "model"
+        return P(*parts)
+
+    ssm = state.ssm
+    if ssm is not None:
+        ssm = ssm._replace(ssm=_split(ssm.ssm, 2), conv=_split(ssm.conv, 3))
+    return _lm.PagedDecodeState(
+        kv_k=_split(state.kv_k, 3), kv_v=_split(state.kv_v, 3),
+        ssm=ssm,
+        shared_k=_split(state.shared_k, 3),
+        shared_v=_split(state.shared_v, 3),
+        page_table=P(), lengths=P())
+
+
 def batch_pspec(mesh: Mesh, batch_size: int) -> Optional[tuple]:
     """Mesh axes to shard the batch dim over (pod+data when divisible)."""
     axes = [a for a in BATCH_AXES if a in mesh.shape]

@@ -510,6 +510,34 @@ def restore(workdir: str, step: int, template: Any,
     return tree, manifest
 
 
+def read_leaves(workdir: str, step: int, keys) -> tuple:
+    """Read a SUBSET of leaves from a published checkpoint (CRC-verified).
+
+    ``keys`` is an iterable of flat keys (``SEP``-joined paths) or a
+    predicate ``key -> bool`` applied to every archive key.  Returns
+    ``({key: np.ndarray}, manifest)`` with void dtypes re-viewed.  This is
+    the read side of adapter serving: the engine extracts per-tenant ``B``
+    (and the shared projection ``V``) from a training checkpoint without
+    materialising the full optimizer state.
+    """
+    path = os.path.join(workdir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    pred = keys if callable(keys) else (lambda k, _s=set(keys): k in _s)
+    out = {}
+    for key in npz.files:
+        if not pred(key):
+            continue
+        arr = npz[key]  # lazy per-leaf load
+        crc = zlib.crc32(arr.tobytes())
+        if crc != manifest["crc"].get(key):
+            raise IOError(f"checkpoint corruption at leaf {key!r} "
+                          f"(crc {crc} != {manifest['crc'].get(key)})")
+        out[key] = _undo_void(arr, key, manifest)
+    return out, manifest
+
+
 def quarantine(workdir: str, step: int) -> str:
     """Move a damaged checkpoint aside as ``step_XXXX.corrupt`` — never
     deleted: it is evidence (and possibly partially recoverable by hand).

@@ -251,3 +251,16 @@ def make_decode_step(cfg: ModelConfig):
     def decode_step(params, token, state):
         return lm.decode_step(params, token, cfg, state)
     return decode_step
+
+
+def make_paged_decode_step(cfg: ModelConfig):
+    """Decode over a :class:`repro.models.lm.PagedDecodeState` — ragged
+    sequences share one page arena (the serving engine's hot path)."""
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError(
+            "paged serving does not cover encoder-decoder models "
+            "(cross-attention caches)")
+
+    def decode_step(params, token, state):
+        return lm.decode_step_paged(params, token, cfg, state)
+    return decode_step
