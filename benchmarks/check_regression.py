@@ -197,6 +197,42 @@ def check_guard_overhead(fresh: dict) -> list[str]:
     return []
 
 
+def check_serve_guard(fresh: dict) -> list[str]:
+    """Serving-resilience gate (baseline-free): the traced per-row logit
+    health guard vs the unguarded decode step, both timed in the same
+    run on the same engine geometry.  The guard is a per-row finite/
+    collapse reduction, a masked write-back over buffers the step
+    already owns, and ONE fetched fault vector per step — if its ratio
+    exceeds the ceiling, tenant isolation started costing real decode
+    time.  The guarded program must also still trace exactly once:
+    quarantine works by masking, never by recompilation."""
+    sv = fresh.get("serve")
+    if not sv:
+        return []  # check_serve_bytes already reports the missing section
+    raw = sv.get("decode_step_ms")
+    guarded = sv.get("decode_step_guarded_ms")
+    if not raw or guarded is None:
+        return ["serve: decode_step_guarded_ms missing from fresh run "
+                "(kernel_bench must time the guarded decode step)"]
+    failures = []
+    rel = guarded / raw
+    limit = 1.0 + MAX_GUARD_OVERHEAD
+    status = "FAIL" if rel > limit else "ok"
+    print(f"[{status}] serve row guard: guarded {guarded:.3f} ms vs raw "
+          f"{raw:.3f} ms per decode step -> {rel:.2f}x, limit "
+          f"{limit:.2f}x")
+    if rel > limit:
+        failures.append(
+            f"guarded decode step costs {rel:.2f}x the unguarded step "
+            f"(limit {limit:.2f}x)")
+    traces = sv.get("decode_traces")
+    if traces != 1:
+        failures.append(
+            f"serve: guarded decode traced {traces!r}x (the row guard "
+            f"must preserve the single-trace contract)")
+    return failures
+
+
 def check_serve_bytes(fresh: dict) -> list[str]:
     """Serving gate: the serve section must carry method/dtype provenance
     (which registered method's checkpoints the adapters come from, what
@@ -246,6 +282,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     failures += check_state_bytes(fresh)
     failures += check_guard_overhead(fresh)
     failures += check_serve_bytes(fresh)
+    failures += check_serve_guard(fresh)
     base_g = baseline.get("grouped_state", {})
     fresh_g = fresh.get("grouped_state", {})
     # the ms-ratio gate only means something dtype-vs-same-dtype: a bf16

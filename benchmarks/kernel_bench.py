@@ -399,27 +399,41 @@ def bench_serve() -> dict:
             b.shape[:-3] + b.shape[-2:]).astype(np.float32)
             for b in store.b_full]
         store.add_tenant(f"tenant{t}", bs, projs)
-    ecfg = EngineConfig(page_size=8, max_batch=n_req,
-                        max_len=prompt_len + gen, max_out=gen)
-    eng = Engine(params, cfg, adapters=store, engine_cfg=ecfg)
     toks = np.asarray(jax.random.randint(
         jax.random.key(1), (n_req, prompt_len), 0, cfg.vocab_size))
 
-    def submit_all(tag):
-        for i in range(n_req):
-            eng.submit(Request(f"{tag}{i}", toks[i], gen,
-                               tenant=f"tenant{i % n_tenants}"))
+    def time_engine(guard):
+        ecfg = EngineConfig(page_size=8, max_batch=n_req,
+                            max_len=prompt_len + gen, max_out=gen,
+                            guard=guard)
+        eng = Engine(params, cfg, adapters=store, engine_cfg=ecfg)
 
-    submit_all("warm")
-    eng.run()                                 # compile prefill + decode
-    iters = 3 if FAST else 10
-    best_s = float("inf")
-    for it in range(iters):
-        submit_all(f"r{it}-")
-        t0 = time.perf_counter()
-        out = eng.run()
-        best_s = min(best_s, time.perf_counter() - t0)
+        def submit_all(tag):
+            for i in range(n_req):
+                eng.submit(Request(f"{tag}{i}", toks[i], gen,
+                                   tenant=f"tenant{i % n_tenants}"))
+
+        submit_all("warm")
+        eng.run()                             # compile prefill + decode
+        iters = 3 if FAST else 10
+        best_s = float("inf")
+        for it in range(iters):
+            submit_all(f"r{it}-")
+            t0 = time.perf_counter()
+            out = eng.run()
+            best_s = min(best_s, time.perf_counter() - t0)
+        return eng, best_s, out
+
+    # unguarded reference vs the traced row-health guard (PR 10): the
+    # guard adds a per-row finite/collapse check + masked write-back and
+    # ONE fetched fault vector per step — check_regression caps its
+    # overhead and requires the guarded program to stay single-trace
+    raw_eng, raw_s, out = time_engine(guard=False)
+    g_eng, g_s, _ = time_engine(guard=True)
+    ecfg = raw_eng.ecfg
     n_tok = sum(len(v) for v in out.values())
+    best_s = raw_s
+    eng = g_eng
 
     lead = lambda s: int(np.prod(s[:-2])) if len(s) > 2 else 1
     groups = [(spec.shape[-2], spec.shape[-1], spec.rank,
@@ -440,6 +454,7 @@ def bench_serve() -> dict:
         "decode_traces": eng.traces,
         "tokens_per_s": n_tok / best_s,
         "decode_step_ms": 1e3 * best_s / gen,
+        "decode_step_guarded_ms": 1e3 * g_s / gen,
         # roofline-derived weight-stream bytes of ONE batched decode step:
         # lazy (W + V + per-row B) vs merged-per-tenant (T full W copies)
         "serve_bytes": sb,
@@ -449,6 +464,8 @@ def bench_serve() -> dict:
           f"lazy {sb['lazy_bytes'] / 2**20:.1f} MiB vs merged "
           f"{sb['merged_bytes'] / 2**20:.1f} MiB per step "
           f"({sb['reduction'] * 100:.0f}% reduction), "
+          f"guarded {out_rec['decode_step_guarded_ms']:.3f} vs "
+          f"{out_rec['decode_step_ms']:.3f} ms/step, "
           f"traces={out_rec['decode_traces']}")
     return out_rec
 

@@ -6,8 +6,17 @@ Each request owns only the pages its sequence actually fills — no
 through one fused low-rank forward; the argmax token never leaves the
 device between steps.
 
+Resilience (PR 10): the decode program carries a traced per-row logit
+health guard (REPRO_SERVE_GUARD), requests accept per-request
+deadlines (``--ttl``), sampling is available behind ``--temperature``/
+``--top-k`` (greedy stays the default), and ``--snapshot-dir`` arms
+SIGTERM/SIGINT draining: interrupt the run and it serializes the whole
+engine for warm restart, which this demo then performs.
+
 Run:  PYTHONPATH=src python examples/serve.py [--arch mamba2-780m]
       PYTHONPATH=src python examples/serve.py --tenants 2
+      PYTHONPATH=src python examples/serve.py --temperature 0.8 --top-k 40
+      PYTHONPATH=src python examples/serve.py --snapshot-dir /tmp/snap
 """
 import argparse
 import time
@@ -48,6 +57,18 @@ def main():
     p.add_argument("--tenants", type=int, default=0,
                    help="serve N tenants with distinct B adapters "
                         "(0 = base weights)")
+    p.add_argument("--ttl", type=int, default=0,
+                   help="per-request deadline in engine steps "
+                        "(0 = none); expired requests return partials")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="sampling temperature (0 = greedy, the "
+                        "bit-exactness reference)")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="restrict sampling to the top-k logits "
+                        "(0 = full vocab)")
+    p.add_argument("--snapshot-dir", default=None,
+                   help="arm SIGTERM/SIGINT draining: serialize the "
+                        "engine here and warm-restart from it")
     args = p.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -56,8 +77,11 @@ def main():
 
     max_len = cfg.vision_prefix_len + args.prompt_len + args.gen
     ecfg = EngineConfig.from_env(max_batch=args.batch, max_len=max_len,
-                                 max_out=args.gen)
-    eng = Engine(params, cfg, adapters=adapters, engine_cfg=ecfg)
+                                 max_out=args.gen,
+                                 temperature=args.temperature,
+                                 top_k=args.top_k)
+    eng = Engine(params, cfg, adapters=adapters, engine_cfg=ecfg,
+                 snapshot_dir=args.snapshot_dir)
 
     toks = jax.random.randint(jax.random.key(1),
                               (args.batch, args.prompt_len), 0,
@@ -72,11 +96,21 @@ def main():
         tenant = f"tenant{i % args.tenants}" if args.tenants else None
         eng.submit(Request(rid=f"req{i}", prompt=toks[i],
                            max_new=args.gen, tenant=tenant,
-                           extra_embeds=extra))
+                           extra_embeds=extra,
+                           ttl=args.ttl or None))
 
     t0 = time.perf_counter()
     outputs = eng.run()
     dt = time.perf_counter() - t0
+
+    if args.snapshot_dir is not None and (eng._queue or
+                                          eng._active_slots()):
+        # the run was drained by a signal: warm-restart and finish
+        print(f"drained mid-run; warm-restarting from "
+              f"{args.snapshot_dir}")
+        eng = Engine.restore(args.snapshot_dir, params, cfg,
+                             adapters=adapters)
+        outputs.update(eng.run())
 
     n_tok = sum(len(v) for v in outputs.values())
     pool = eng.pool
@@ -89,7 +123,13 @@ def main():
           f"({n_tok/dt:.0f} tok/s, traces={eng.traces})")
     first = outputs["req0"]
     print(f"generated ids[req0]: {first[:12].tolist()} ...")
-    assert all(len(v) == args.gen for v in outputs.values())
+    if eng.reasons:
+        short = {k: v for k, v in eng.reasons.items()
+                 if v != "completed"}
+        if short:
+            print(f"non-completed requests: {short}")
+    if not args.ttl:
+        assert all(len(v) == args.gen for v in outputs.values())
     print("serve OK")
 
 

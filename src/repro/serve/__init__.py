@@ -1,17 +1,44 @@
-"""Multi-tenant low-rank serving: continuous batching over a paged decode
-cache, with per-tenant ``B`` adapters served lazily as ``W + V Bᵀ``
-through the fused low-rank forward (the merge is never materialised).
+"""Multi-tenant low-rank serving: continuous batching over a paged
+decode cache, with per-tenant ``B`` adapters served lazily as
+``W + V Bᵀ`` through the fused low-rank forward (the merge is never
+materialised).
 
 Entry points:
-  :class:`Engine` / :class:`EngineConfig` / :class:`Request` — the loop;
-  :class:`AdapterStore` — per-tenant (B, V) loaded from training
+  :class:`Engine` / :class:`EngineConfig` / :class:`Request` — the
+  loop; :class:`AdapterStore` — per-tenant (B, V) loaded from training
   checkpoints; :class:`PagePool` — the host-side page free list.
+Failure surface (docs/serving.md "Failure modes & guarantees"):
+  :class:`EngineBusy` — bounded-queue backpressure;
+  :class:`TenantQuarantinedError` — a tenant's adapter produced
+  unhealthy decode rows and was isolated from its co-tenants;
+  :class:`AdapterMismatchError` — incompatible checkpoint refused
+  before any store state is touched.
 """
-from .adapters import (ADAPTER_METHODS, AdapterMismatchError, AdapterStore,
-                       batched_pack_tree)
-from .engine import Engine, EngineConfig, Request
+
+from .adapters import (
+    ADAPTER_METHODS,
+    AdapterMismatchError,
+    AdapterStore,
+    batched_pack_tree,
+)
+from .engine import (
+    Engine,
+    EngineBusy,
+    EngineConfig,
+    Request,
+    TenantQuarantinedError,
+)
 from .pages import PagePool
 
-__all__ = ["ADAPTER_METHODS", "AdapterMismatchError", "AdapterStore",
-           "batched_pack_tree", "Engine", "EngineConfig", "PagePool",
-           "Request"]
+__all__ = [
+    "ADAPTER_METHODS",
+    "AdapterMismatchError",
+    "AdapterStore",
+    "batched_pack_tree",
+    "Engine",
+    "EngineBusy",
+    "EngineConfig",
+    "PagePool",
+    "Request",
+    "TenantQuarantinedError",
+]

@@ -2,26 +2,37 @@
 
 The training side stacks same-shape low-rank leaves into grouped
 ``(G, ...)`` buffers (optim.subspace); serving extends each group buffer
-with a *tenant* axis at position -3 — ``(G,) + lead + (T, n, r)`` — so one
-gather per group turns "which tenant does each decode slot belong to" into
-the per-row :class:`~repro.models.linear.BatchLRPack` adapters the fused
-batched forward consumes.  ``W + V Bᵀ`` is never materialised: unloaded
-tenant rows are zero, which serves the base weights exactly.
+with a *tenant* axis at position -3 — ``(G,) + lead + (T, n, r)`` — so
+one gather per group turns "which tenant does each decode slot belong
+to" into the per-row :class:`~repro.models.linear.BatchLRPack` adapters
+the fused batched forward consumes.  ``W + V Bᵀ`` is never
+materialised: unloaded tenant rows are zero, which serves the base
+weights exactly.
 
 Adapters load straight from training checkpoints via
-:func:`repro.train.checkpoint.read_leaves` — only the ``opt||groups||g||b``
-and ``...||proj`` records are touched (B masters and V are stored plain
-even under int8 optimizer state, so no dequantisation is needed).  The
-manifest's method/arch tags gate admission: only subspace methods whose B
-is a servable adapter qualify, and a checkpoint from a different
-architecture, rank or group structure is refused up front with
-:class:`AdapterMismatchError` rather than failing later inside a kernel.
+:func:`repro.train.checkpoint.read_leaves` — only the
+``opt||groups||g||b`` and ``...||proj`` records are touched (B masters
+and V are stored plain even under int8 optimizer state, so no
+dequantisation is needed).  The manifest's method/arch tags gate
+admission: only subspace methods whose B is a servable adapter qualify,
+and a checkpoint from a different architecture, rank or group structure
+is refused up front with :class:`AdapterMismatchError` rather than
+failing later inside a kernel.
 
-All tenants of one store must share the projection ``V`` — i.e. come from
-runs with the same sampler seed that have not diverged across an outer
-merge-resample cycle (train fewer than ``lazy_k`` steps apart, or pin the
-outer key).  ``V`` drift is checked numerically at load time.
+Hot-swaps are TWO-PHASE: every incoming tenant is validated (CRC via
+the checkpoint manifest, method/arch tags, group shapes, V drift) and
+staged into fresh buffers first; only then does one commit of plain
+attribute rebinds flip the store over.  A crash or refusal at any point
+before the commit leaves the store byte-identical — a torn swap can
+never leave it half-updated.  The labeled crash points
+(``chaos.SWAP_SITES``) let the chaos harness prove that.
+
+All tenants of one store must share the projection ``V`` — i.e. come
+from runs with the same sampler seed that have not diverged across an
+outer merge-resample cycle (train fewer than ``lazy_k`` steps apart, or
+pin the outer key).  ``V`` drift is checked numerically at load time.
 """
+
 from __future__ import annotations
 
 import re
@@ -31,17 +42,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models import lm
 from ..models.common import act_dtype
 from ..models.linear import BatchLRPack, LRPack
-from ..models import lm
 from ..optim import subspace
-from ..train import checkpoint
+from ..train import chaos, checkpoint
 
 Array = jax.Array
 
-# Methods whose checkpointed B is a servable low-rank adapter.  adamw has
-# no subspace at all; galore's projected moments are an optimizer detail,
-# not a weight delta.
+# Methods whose checkpointed B is a servable low-rank adapter.  adamw
+# has no subspace at all; galore's projected moments are an optimizer
+# detail, not a weight delta.
 ADAPTER_METHODS = ("lowrank_adam", "lowrank_lion", "lowrank_lr")
 
 _SEP = re.escape(checkpoint.SEP)
@@ -50,19 +61,19 @@ _GROUP_KEY = re.compile(rf"^opt{_SEP}groups{_SEP}(\d+){_SEP}(b|proj)$")
 
 class AdapterMismatchError(ValueError):
     """Tenant checkpoint is incompatible with this serving engine — a
-    CONFIG error (wrong method/arch/rank/V), refused before any state is
-    mutated."""
+    CONFIG error (wrong method/arch/rank/V), refused before any state
+    is mutated."""
 
 
 class AdapterStore:
     """Stacked per-tenant adapters for one model config.
 
-    ``b_full[g]``: ``(G,) + lead + (max_tenants, n, r)`` — tenant axis at
-    -3 so a per-group ``jnp.take(..., axis=-3)`` yields the per-row
-    ``(..., batch, n, r)`` adapter stack for a decode batch.  ``projs[g]``:
-    ``(G,) + lead + (k, r)`` shared projection.  Hot-swapping a tenant is
-    a same-shape buffer update — jitted programs keyed on these shapes
-    never retrace.
+    ``b_full[g]``: ``(G,) + lead + (max_tenants, n, r)`` — tenant axis
+    at -3 so a per-group ``jnp.take(..., axis=-3)`` yields the per-row
+    ``(..., batch, n, r)`` adapter stack for a decode batch.
+    ``projs[g]``: ``(G,) + lead + (k, r)`` shared projection.
+    Hot-swapping a tenant is a same-shape buffer update — jitted
+    programs keyed on these shapes never retrace.
     """
 
     def __init__(self, cfg, tcfg, max_tenants: int, algo: str = "adam"):
@@ -80,13 +91,14 @@ class AdapterStore:
             g = len(spec.leaf_idx)
             lead = spec.shape[:-2]
             k, n = spec.shape[-2], spec.shape[-1]
-            self.b_full.append(jnp.zeros(
-                (g,) + lead + (self.max_tenants, n, spec.rank), dt))
+            self.b_full.append(
+                jnp.zeros((g,) + lead + (self.max_tenants, n, spec.rank), dt)
+            )
             self.projs.append(jnp.zeros((g,) + lead + (k, spec.rank), dt))
         self._tenants: Dict[str, int] = {}
         self._proj_loaded = False
 
-    # -- introspection ----------------------------------------------------
+    # -- introspection -----------------------------------------------------
 
     @property
     def n_tenants(self) -> int:
@@ -95,7 +107,7 @@ class AdapterStore:
     def tenant_index(self, tenant: str) -> int:
         return self._tenants[tenant]
 
-    # -- loading ----------------------------------------------------------
+    # -- loading -----------------------------------------------------------
 
     def _next_slot(self, tenant: str) -> int:
         if tenant in self._tenants:
@@ -103,7 +115,8 @@ class AdapterStore:
         if len(self._tenants) >= self.max_tenants:
             raise AdapterMismatchError(
                 f"adapter store is full ({self.max_tenants} tenants); "
-                f"cannot load {tenant!r}")
+                f"cannot load {tenant!r}"
+            )
         return len(self._tenants)
 
     def add_tenant(self, tenant: str, b_groups, projs=None) -> int:
@@ -111,132 +124,179 @@ class AdapterStore:
 
         ``b_groups``: one ``(G,) + lead + (n, r)`` array per group;
         ``projs``: matching V buffers (first installation pins them,
-        later ones must agree).
+        later ones must agree).  Two-phase: validate, stage, commit.
         """
         b_groups = [np.asarray(b) for b in b_groups]
-        self._check_group_shapes(tenant, b_groups,
-                                 None if projs is None
-                                 else [np.asarray(v) for v in projs])
-        slot = self._next_slot(tenant)
+        projs = None if projs is None else [np.asarray(v) for v in projs]
+        self._check_group_shapes(tenant, b_groups, projs)
         if projs is not None:
-            self._install_projs(tenant, [np.asarray(v) for v in projs])
-        for g, b in enumerate(b_groups):
-            self.b_full[g] = self.b_full[g].at[..., slot, :, :].set(
-                jnp.asarray(b, self.b_full[g].dtype))
-        self._tenants[tenant] = slot
-        return slot
+            self._check_proj_drift(tenant, projs)
+        return self._two_phase_install(tenant, b_groups, projs)
 
-    def load_tenant(self, tenant: str, workdir: str,
-                    step: Optional[int] = None) -> int:
+    def load_tenant(
+        self, tenant: str, workdir: str, step: Optional[int] = None
+    ) -> int:
         """Load a tenant's (B, V) from a training checkpoint.
 
-        Validates manifest method/arch tags and group shapes before any
-        store state is touched; refuses with :class:`AdapterMismatchError`.
-        Re-loading a known tenant hot-swaps its slot in place.
-        """
+        Validates manifest method/arch tags, CRC integrity and group
+        shapes before any store state is touched; refuses with
+        :class:`AdapterMismatchError` (corruption surfaces as the
+        checkpoint layer's ``IOError``).  Re-loading a known tenant
+        hot-swaps its slot in place — two-phase, so a crash mid-swap
+        leaves the previous adapter serving."""
         if step is None:
             step = checkpoint.latest_step(workdir)
             if step is None:
                 raise AdapterMismatchError(
                     f"no checkpoint found in {workdir!r} for tenant "
-                    f"{tenant!r}")
+                    f"{tenant!r}"
+                )
         leaves, manifest = checkpoint.read_leaves(
-            workdir, step, lambda k: _GROUP_KEY.match(k) is not None)
+            workdir, step, lambda k: _GROUP_KEY.match(k) is not None
+        )
         extra = manifest.get("extra") or {}
         method = extra.get("method")
         if method not in ADAPTER_METHODS:
             raise AdapterMismatchError(
-                f"tenant {tenant!r}: checkpoint method {method!r} does not "
-                f"produce servable low-rank adapters (expected one of "
-                f"{ADAPTER_METHODS}); adamw/galore states have no (B, V) "
-                f"to serve")
+                f"tenant {tenant!r}: checkpoint method {method!r} does "
+                f"not produce servable low-rank adapters (expected one "
+                f"of {ADAPTER_METHODS}); adamw/galore states have no "
+                f"(B, V) to serve"
+            )
         arch = extra.get("arch")
         if arch is not None and arch != self.cfg.name:
             raise AdapterMismatchError(
                 f"tenant {tenant!r}: checkpoint arch {arch!r} != engine "
-                f"arch {self.cfg.name!r}")
+                f"arch {self.cfg.name!r}"
+            )
         n_g = len(self.layout.groups)
         b_groups, projs = [], []
         for g in range(n_g):
-            bk = f"opt{checkpoint.SEP}groups{checkpoint.SEP}{g}" \
-                 f"{checkpoint.SEP}b"
-            vk = f"opt{checkpoint.SEP}groups{checkpoint.SEP}{g}" \
-                 f"{checkpoint.SEP}proj"
+            bk = (
+                f"opt{checkpoint.SEP}groups{checkpoint.SEP}{g}"
+                f"{checkpoint.SEP}b"
+            )
+            vk = (
+                f"opt{checkpoint.SEP}groups{checkpoint.SEP}{g}"
+                f"{checkpoint.SEP}proj"
+            )
             if bk not in leaves or vk not in leaves:
                 raise AdapterMismatchError(
                     f"tenant {tenant!r}: checkpoint has "
                     f"{len(leaves) // 2} adapter groups, engine layout "
-                    f"expects {n_g} (arch/config drift?)")
+                    f"expects {n_g} (arch/config drift?)"
+                )
         # a checkpoint with MORE groups than the layout is drift too
         seen = {int(m.group(1)) for m in map(_GROUP_KEY.match, leaves)}
         if seen != set(range(n_g)):
             raise AdapterMismatchError(
                 f"tenant {tenant!r}: checkpoint group ids {sorted(seen)} "
-                f"!= engine layout groups {list(range(n_g))}")
+                f"!= engine layout groups {list(range(n_g))}"
+            )
         for g in range(n_g):
-            pre = f"opt{checkpoint.SEP}groups{checkpoint.SEP}{g}" \
-                  f"{checkpoint.SEP}"
-            b_groups.append(np.asarray(
-                jnp.asarray(leaves[pre + "b"], jnp.float32)))
-            projs.append(np.asarray(
-                jnp.asarray(leaves[pre + "proj"], jnp.float32)))
+            pre = (
+                f"opt{checkpoint.SEP}groups{checkpoint.SEP}{g}"
+                f"{checkpoint.SEP}"
+            )
+            b_groups.append(
+                np.asarray(jnp.asarray(leaves[pre + "b"], jnp.float32))
+            )
+            projs.append(
+                np.asarray(jnp.asarray(leaves[pre + "proj"], jnp.float32))
+            )
         self._check_group_shapes(tenant, b_groups, projs)
+        self._check_proj_drift(tenant, projs)
+        return self._two_phase_install(tenant, b_groups, projs)
+
+    def _two_phase_install(self, tenant, b_groups, projs) -> int:
+        """Stage-then-commit.  Everything that can fail (allocation,
+        chaos crashes) happens on STAGED copies; the commit is a run of
+        plain attribute rebinds with nothing in between that can raise,
+        so the store is either fully the old tenant set or fully the
+        new one."""
+        chaos.maybe_raise("swap:pre_stage")
         slot = self._next_slot(tenant)
-        self._install_projs(tenant, projs)
-        for g, b in enumerate(b_groups):
-            self.b_full[g] = self.b_full[g].at[..., slot, :, :].set(
-                jnp.asarray(b, self.b_full[g].dtype))
+        staged_b = [
+            self.b_full[g]
+            .at[..., slot, :, :]
+            .set(jnp.asarray(b, self.b_full[g].dtype))
+            for g, b in enumerate(b_groups)
+        ]
+        staged_v = None
+        if projs is not None and not self._proj_loaded:
+            staged_v = [
+                jnp.asarray(v, self.projs[g].dtype)
+                for g, v in enumerate(projs)
+            ]
+        chaos.maybe_raise("swap:pre_commit")
+        if staged_v is not None:
+            self.projs = staged_v
+            self._proj_loaded = True
+        self.b_full = staged_b
         self._tenants[tenant] = slot
+        chaos.maybe_raise("swap:post_commit")
         return slot
 
     def _check_group_shapes(self, tenant, b_groups, projs):
         if len(b_groups) != len(self.layout.groups):
             raise AdapterMismatchError(
                 f"tenant {tenant!r}: {len(b_groups)} adapter groups, "
-                f"engine layout expects {len(self.layout.groups)}")
+                f"engine layout expects {len(self.layout.groups)}"
+            )
         for g, spec in enumerate(self.layout.groups):
             lead = spec.shape[:-2]
-            want_b = (len(spec.leaf_idx),) + lead + (spec.shape[-1],
-                                                     spec.rank)
+            want_b = (
+                (len(spec.leaf_idx),) + lead + (spec.shape[-1], spec.rank)
+            )
             if tuple(b_groups[g].shape) != want_b:
                 raise AdapterMismatchError(
                     f"tenant {tenant!r}: group {g} B has shape "
-                    f"{tuple(b_groups[g].shape)}, engine expects {want_b} "
-                    f"(rank/arch mismatch between tenant training and "
-                    f"serving config)")
+                    f"{tuple(b_groups[g].shape)}, engine expects "
+                    f"{want_b} (rank/arch mismatch between tenant "
+                    f"training and serving config)"
+                )
             if projs is not None:
-                want_v = (len(spec.leaf_idx),) + lead + (spec.shape[-2],
-                                                         spec.rank)
+                want_v = (
+                    (len(spec.leaf_idx),)
+                    + lead
+                    + (spec.shape[-2], spec.rank)
+                )
                 if tuple(projs[g].shape) != want_v:
                     raise AdapterMismatchError(
                         f"tenant {tenant!r}: group {g} V has shape "
-                        f"{tuple(projs[g].shape)}, engine expects {want_v}")
+                        f"{tuple(projs[g].shape)}, engine expects "
+                        f"{want_v}"
+                    )
 
-    def _install_projs(self, tenant, projs):
+    def _check_proj_drift(self, tenant, projs):
+        """Validation only — never mutates (staging installs V)."""
         if not self._proj_loaded:
-            self.projs = [jnp.asarray(v, self.projs[g].dtype)
-                          for g, v in enumerate(projs)]
-            self._proj_loaded = True
             return
         for g, v in enumerate(projs):
-            if not np.allclose(np.asarray(self.projs[g], np.float32),
-                               np.asarray(v, np.float32),
-                               rtol=1e-5, atol=1e-6):
+            if not np.allclose(
+                np.asarray(self.projs[g], np.float32),
+                np.asarray(v, np.float32),
+                rtol=1e-5,
+                atol=1e-6,
+            ):
                 raise AdapterMismatchError(
-                    f"tenant {tenant!r}: projection V of group {g} differs "
-                    f"from the store's shared V — tenants must come from "
-                    f"runs with the same sampler key that have not crossed "
-                    f"an outer merge-resample cycle (lazy_k)")
+                    f"tenant {tenant!r}: projection V of group {g} "
+                    f"differs from the store's shared V — tenants must "
+                    f"come from runs with the same sampler key that "
+                    f"have not crossed an outer merge-resample cycle "
+                    f"(lazy_k)"
+                )
 
-    # -- packing ----------------------------------------------------------
+    # -- packing -----------------------------------------------------------
 
     def lrpack_tree(self, params, tenant: str):
-        """Single-tenant :class:`LRPack` tree (prefill path, batch of 1)."""
+        """Single-tenant :class:`LRPack` tree (prefill path, batch of
+        1)."""
         t = self._tenants[tenant]
         leaves, treedef = jax.tree_util.tree_flatten(params)
         out = list(leaves)
         for g, spec in enumerate(self.layout.groups):
-            bt = self.b_full[g][..., t, :, :]        # (G,)+lead+(n,r)
+            bt = self.b_full[g][..., t, :, :]  # (G,)+lead+(n,r)
             for j, i in enumerate(spec.leaf_idx):
                 out[i] = LRPack(leaves[i], bt[j], self.projs[g][j])
         return jax.tree_util.tree_unflatten(treedef, out)
@@ -246,8 +306,8 @@ def batched_pack_tree(params, layout, b_fulls, projs, slot_tenants):
     """Per-row :class:`BatchLRPack` tree for one decode batch.
 
     ``slot_tenants``: (batch,) int32 tenant index per decode slot.  One
-    gather per group (axis -3, the tenant axis) — traced inside the decode
-    jit so hot-swapped buffers flow through without retracing.
+    gather per group (axis -3, the tenant axis) — traced inside the
+    decode jit so hot-swapped buffers flow through without retracing.
     """
     leaves, treedef = jax.tree_util.tree_flatten(params)
     out = list(leaves)

@@ -2,11 +2,12 @@
 
 One fixed-size decode batch of ``max_batch`` slots is stepped in
 lock-step; sequences join (prefill + page-chain allocation) and leave
-(evict, pages freed) between steps, so the jitted decode program is traced
-once and reused for the whole workload.  The per-step loop is:
+(evict, pages freed) between steps, so the jitted decode program is
+traced once and reused for the whole workload.  The per-step loop is:
 
-  1. evict finished slots (the only device->host sync: one output-row
-     fetch per finished sequence);
+  1. evict finished / expired slots (the only routine device->host sync:
+     one output-row fetch per finished sequence, plus the packed fault
+     vector when the guard is on);
   2. admit queued requests while a slot AND their whole page chain are
      available (all-or-nothing admission — the backpressure signal);
   3. grow page chains for slots whose next token starts a fresh page,
@@ -14,23 +15,43 @@ once and reused for the whole workload.  The per-step loop is:
      vLLM discipline) when the pool runs dry;
   4. run one batched decode step: every active slot advances one token,
      all tenants answered by one fused ``W + V Bᵀ`` low-rank forward —
-     the merge is never materialised, argmax stays on device.
+     the merge is never materialised, token selection stays on device.
 
 Inactive slots ride along with ``lengths == 0``: their cache writes
-scatter out of bounds (dropped) and their logits are never read.  Because
-every per-slot operation is row-local and page-chain scan order is
-deterministic, a sequence decoded inside a mixed batch is bit-identical
-to the same sequence decoded alone (fp32, barring preemption — a
-preempted sequence re-enters through prefill, which is a different but
-still exact program).
+scatter out of bounds (dropped) and their logits are never read.
+Because every per-slot operation is row-local and page-chain scan order
+is deterministic, a sequence decoded inside a mixed batch is
+bit-identical to the same sequence decoded alone (fp32, barring
+preemption — a preempted sequence re-enters through prefill, which is a
+different but still exact program).
 
-Knobs (see docs/knobs.md): REPRO_SERVE_PAGE_SIZE, REPRO_SERVE_MAX_BATCH,
-REPRO_SERVE_NUM_PAGES, REPRO_SERVE_MAX_LEN.
+Resilience (PR 10) rides the same traced program, mirroring the
+training loop's guard philosophy (train/health.py): a per-row logit
+health check (non-finite / all-mass-collapse) runs inside the decode
+jit and quarantines only the offending rows via masked write-back — a
+faulted row's length does not advance, so its poisoned cache write sits
+past ``length`` where the attention mask never reads it, and healthy
+rows decode bit-identically.  The per-step observable is ONE packed
+fault vector; no host callbacks ever enter the traced program (jaxpr-
+audited in tests), and the guard never retraces (``engine.traces`` stays
+1).  Host-side policy on top: per-request TTLs enforced at eviction
+boundaries, a bounded admission queue that rejects with
+:class:`EngineBusy` instead of deadlocking, per-tenant strike counters
+that auto-disable a misbehaving adapter
+(:class:`TenantQuarantinedError`), and SIGTERM/SIGINT draining that
+serializes the whole engine through the hardened checkpoint layer for
+warm restart.
+
+Knobs (see docs/knobs.md): REPRO_SERVE_PAGE_SIZE,
+REPRO_SERVE_MAX_BATCH, REPRO_SERVE_NUM_PAGES, REPRO_SERVE_MAX_LEN,
+REPRO_SERVE_MAX_QUEUE, REPRO_SERVE_GUARD, REPRO_SERVE_STRIKES.
 """
+
 from __future__ import annotations
 
 import dataclasses
 import os
+import signal
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -38,13 +59,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import lm
-from ..models.lm import (DecodeState, PagedDecodeState, alloc_decode_state,
-                         alloc_paged_state, decode_step_paged, prefill)
+from ..models.lm import (
+    DecodeState,
+    PagedDecodeState,
+    alloc_decode_state,
+    alloc_paged_state,
+    decode_step_paged,
+    prefill,
+)
+from ..train import chaos, checkpoint, health
 from .adapters import AdapterStore, batched_pack_tree
 from .pages import PagePool
 
 Array = jax.Array
+
+
+class EngineBusy(RuntimeError):
+    """Bounded admission queue is full — explicit backpressure to the
+    caller (resubmit later), never a deadlock."""
+
+
+class TenantQuarantinedError(RuntimeError):
+    """A tenant's adapter produced unhealthy decode rows and was
+    quarantined; surfaced to that tenant's caller, never to co-tenants."""
 
 
 def _env_int(name: str, default: int) -> int:
@@ -54,12 +91,24 @@ def _env_int(name: str, default: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Static engine geometry (jit shape keys — fixed for a run)."""
-    page_size: int = 16       # tokens per cache page
-    max_batch: int = 4        # decode slots stepped in lock-step
-    num_pages: int = 0        # 0 -> max_batch * ceil(max_len / page_size)
-    max_len: int = 256        # per-sequence cap (page-table width)
-    max_out: int = 128        # widest max_new a request may ask for
+    """Static engine geometry and policy (jit shape keys + host knobs).
+
+    ``guard``/``temperature``/``top_k`` are trace-time constants: greedy
+    decoding (``temperature == 0``) is the bit-exactness reference, and
+    the guard's masked write-back leaves healthy rows bit-identical.
+    """
+
+    page_size: int = 16  # tokens per cache page
+    max_batch: int = 4  # decode slots stepped in lock-step
+    num_pages: int = 0  # 0 -> max_batch * ceil(max_len / page_size)
+    max_len: int = 256  # per-sequence cap (page-table width)
+    max_out: int = 128  # widest max_new a request may ask for
+    max_queue: int = 0  # admission-queue bound; 0 -> unbounded
+    guard: bool = True  # traced per-row logit health guard
+    max_strikes: int = 3  # row faults before a tenant is disabled
+    temperature: float = 0.0  # 0 -> greedy (the reference path)
+    top_k: int = 0  # sampling nucleus size; 0 -> full vocab
+    sample_seed: int = 0  # PRNG seed for sampled decoding
 
     @classmethod
     def from_env(cls, **over) -> "EngineConfig":
@@ -68,6 +117,9 @@ class EngineConfig:
             max_batch=_env_int("REPRO_SERVE_MAX_BATCH", cls.max_batch),
             num_pages=_env_int("REPRO_SERVE_NUM_PAGES", cls.num_pages),
             max_len=_env_int("REPRO_SERVE_MAX_LEN", cls.max_len),
+            max_queue=_env_int("REPRO_SERVE_MAX_QUEUE", cls.max_queue),
+            guard=bool(_env_int("REPRO_SERVE_GUARD", int(cls.guard))),
+            max_strikes=_env_int("REPRO_SERVE_STRIKES", cls.max_strikes),
         )
         base.update(over)
         return cls(**base)
@@ -84,41 +136,77 @@ class Request:
     ``prompt``: 1-D int32 token ids; ``max_new``: tokens to generate
     (includes the one produced by prefill); ``tenant``: adapter name in
     the engine's store (``None`` -> base weights / tenant slot 0);
-    ``extra_embeds``: optional ``(1, P, d)`` prefix (vlm vision tokens).
+    ``extra_embeds``: optional ``(1, P, d)`` prefix (vlm vision tokens);
+    ``ttl``: optional deadline in engine steps from submission —
+    enforced at eviction boundaries, expiry returns whatever was
+    generated.  ``_seq``/``_born`` are engine-internal: admission
+    seniority (preserved across preemption, the starvation guard) and
+    the submission step the TTL counts from.
     """
 
-    __slots__ = ("rid", "prompt", "max_new", "tenant", "extra_embeds")
+    __slots__ = (
+        "rid",
+        "prompt",
+        "max_new",
+        "tenant",
+        "extra_embeds",
+        "ttl",
+        "_seq",
+        "_born",
+    )
 
-    def __init__(self, rid, prompt, max_new: int, tenant: Optional[str] = None,
-                 extra_embeds=None):
+    def __init__(
+        self,
+        rid,
+        prompt,
+        max_new: int,
+        tenant: Optional[str] = None,
+        extra_embeds=None,
+        ttl: Optional[int] = None,
+    ):
         self.rid = rid
         self.prompt = np.asarray(prompt, np.int32).reshape(-1)
         self.max_new = int(max_new)
         self.tenant = tenant
         self.extra_embeds = extra_embeds
+        self.ttl = None if ttl is None else int(ttl)
+        self._seq: Optional[int] = None
+        self._born: Optional[int] = None
         if self.max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if self.ttl is not None and self.ttl < 1:
+            raise ValueError("ttl must be >= 1 (engine steps)")
 
 
 class Engine:
     """Multi-tenant continuous-batching engine for one model config."""
 
-    def __init__(self, params, cfg, *, adapters: Optional[AdapterStore] = None,
-                 engine_cfg: Optional[EngineConfig] = None):
+    def __init__(
+        self,
+        params,
+        cfg,
+        *,
+        adapters: Optional[AdapterStore] = None,
+        engine_cfg: Optional[EngineConfig] = None,
+        snapshot_dir: Optional[str] = None,
+    ):
         if cfg.family == "audio":
             raise NotImplementedError(
                 "encoder-decoder serving (cross-attention caches) is not "
-                "supported by the paged engine")
+                "supported by the paged engine"
+            )
         self.params = params
         self.cfg = cfg
         self.adapters = adapters
         self.ecfg = engine_cfg or EngineConfig.from_env()
+        self.snapshot_dir = snapshot_dir
         ec = self.ecfg
         self.num_pages = ec.resolved_num_pages()
         self.max_pages = -(-ec.max_len // ec.page_size)
         self.pool = PagePool(self.num_pages, ec.page_size)
         self.state: PagedDecodeState = alloc_paged_state(
-            cfg, ec.max_batch, self.num_pages, ec.page_size, ec.max_len)
+            cfg, ec.max_batch, self.num_pages, ec.page_size, ec.max_len
+        )
         # host mirrors (authoritative for page_table / lengths)
         self._pt = np.full((ec.max_batch, self.max_pages), -1, np.int32)
         self._len = np.zeros((ec.max_batch,), np.int32)
@@ -127,73 +215,190 @@ class Engine:
         self._queue: deque = deque()
         self._outputs: Dict = {}
         self._partial: Dict = {}
+        self.errors: Dict = {}
+        self.reasons: Dict = {}
+        self._strikes: Dict[str, int] = {}
+        self._disabled: set = set()
         self._admit_seq = 0
-        self._traces = 0          # decode trace counter (hot-swap test)
+        self._step_count = 0
+        self._traces = 0  # decode trace counter (hot-swap test)
         self._prefill_cache: Dict = {}
+        self._chaos_pages: List[int] = []
+        self._draining = False
+        self._prev_handlers: Optional[dict] = None
         # device-resident decode ring: current token, output ring, counts
         self._tok = jnp.zeros((ec.max_batch, 1), jnp.int32)
         self._out = jnp.zeros((ec.max_batch, ec.max_out), jnp.int32)
         self._counts = jnp.zeros((ec.max_batch,), jnp.int32)
+        self._key = jax.random.key(ec.sample_seed)
         self._decode_jit = self._build_decode()
 
     @property
     def traces(self) -> int:
-        """How many times the batched decode step has been traced (1 after
-        the first step; hot-swapping adapters must not grow this)."""
+        """How many times the batched decode step has been traced (1
+        after the first step; hot-swapping adapters, evictions, guard
+        faults and chaos injections must not grow this)."""
         return self._traces
 
-    # -- jitted programs --------------------------------------------------
+    @property
+    def step_count(self) -> int:
+        return self._step_count
 
-    def _decode_core(self, packed, state, tok, out, counts):
+    def strikes(self, tenant: str) -> int:
+        return self._strikes.get(tenant, 0)
+
+    def disabled_tenants(self) -> tuple:
+        return tuple(sorted(self._disabled))
+
+    # -- jitted programs ---------------------------------------------------
+
+    def _decode_core(self, packed, state, tok, out, counts, key, step):
+        """One traced decode step with the row-health guard woven in.
+
+        The chaos hook is captured at TRACE time (install it before the
+        first step), exactly like ``health.guard_inner_step``: injected
+        faults flow through the same tensors a real bf16 adapter
+        overflow would corrupt, with no retrace and no host callback.
+        """
+        ec = self.ecfg
+        hook = chaos.get()
         active = state.lengths > 0
         lg, nstate = decode_step_paged(packed, tok, self.cfg, state)
-        nxt = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
-        # inactive rows scatter out of bounds (dropped)
-        idx = jnp.where(active, counts, out.shape[1])
+        row = lg[:, -1, :]
+        if hook is not None and hook.logit_rows:
+            one = jnp.ones((), row.dtype)
+            for s, r, mode in hook.logit_rows:
+                bad = jnp.asarray(
+                    float("nan") if mode == "nan" else 0.0, row.dtype
+                )
+                row = row.at[r].multiply(
+                    jnp.where(step == jnp.int32(s), bad, one)
+                )
+        # health looks at the REAL vocab lanes only: the -1e30 padding
+        # fill would mask an all-mass collapse
+        vr = row[:, : self.cfg.vocab_size]
+        if ec.guard:
+            row_ok = health.logits_row_ok(vr)
+        else:
+            row_ok = jnp.ones((row.shape[0],), jnp.bool_)
+        eff = active & row_ok
+        if ec.temperature > 0.0:
+            key, sub = jax.random.split(key)
+            scaled = vr.astype(jnp.float32) / ec.temperature
+            if 0 < ec.top_k < scaled.shape[-1]:
+                kth = jax.lax.top_k(scaled, ec.top_k)[0][:, -1:]
+                scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+            nxt = jax.random.categorical(sub, scaled, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        # inactive and faulted rows scatter out of bounds (dropped)
+        idx = jnp.where(eff, counts, out.shape[1])
         out = out.at[jnp.arange(out.shape[0]), idx].set(nxt, mode="drop")
-        counts = counts + active.astype(jnp.int32)
-        tok = jnp.where(active[:, None], nxt[:, None], tok)
-        return nstate, tok, out, counts
+        counts = counts + eff.astype(jnp.int32)
+        tok = jnp.where(eff[:, None], nxt[:, None], tok)
+        # masked write-back: a faulted row's length does not advance, so
+        # its poisoned cache write sits past `length` where the paged
+        # attention mask never reads it (the next write overwrites it);
+        # slot-indexed SSM state is selected back to its old value
+        nstate = nstate._replace(
+            lengths=jnp.where(row_ok, nstate.lengths, state.lengths)
+        )
+        if nstate.ssm is not None:
+            ks = row_ok.reshape(
+                (1, -1) + (1,) * (nstate.ssm.ssm.ndim - 2)
+            )
+            kc = row_ok.reshape(
+                (1, -1) + (1,) * (nstate.ssm.conv.ndim - 2)
+            )
+            nstate = nstate._replace(
+                ssm=nstate.ssm._replace(
+                    ssm=jnp.where(ks, nstate.ssm.ssm, state.ssm.ssm),
+                    conv=jnp.where(kc, nstate.ssm.conv, state.ssm.conv),
+                )
+            )
+        fault = (active & ~row_ok).astype(jnp.float32)
+        return nstate, tok, out, counts, key, fault
 
     def _build_decode(self):
         if self.adapters is not None:
             layout = self.adapters.layout
 
-            def fn(params, b_fulls, projs, tenants, state, tok, out, counts):
+            def fn(
+                params, b_fulls, projs, tenants, state, tok, out, counts,
+                key, step,
+            ):
                 self._traces += 1
-                packed = batched_pack_tree(params, layout, b_fulls, projs,
-                                           tenants)
-                return self._decode_core(packed, state, tok, out, counts)
-            return jax.jit(fn, donate_argnums=(4, 5, 6, 7))
+                packed = batched_pack_tree(
+                    params, layout, b_fulls, projs, tenants
+                )
+                return self._decode_core(
+                    packed, state, tok, out, counts, key, step
+                )
 
-        def fn(params, state, tok, out, counts):
+            return jax.jit(fn, donate_argnums=(4, 5, 6, 7, 8))
+
+        def fn(params, state, tok, out, counts, key, step):
             self._traces += 1
-            return self._decode_core(params, state, tok, out, counts)
-        return jax.jit(fn, donate_argnums=(1, 2, 3, 4))
+            return self._decode_core(
+                params, state, tok, out, counts, key, step
+            )
+
+        return jax.jit(fn, donate_argnums=(1, 2, 3, 4, 5))
 
     def _decode_args(self, state):
+        step = jnp.asarray(self._step_count, jnp.int32)
         if self.adapters is not None:
-            return (self.params, tuple(self.adapters.b_full),
-                    tuple(self.adapters.projs),
-                    jnp.asarray(self._slot_tenant), state, self._tok,
-                    self._out, self._counts)
-        return (self.params, state, self._tok, self._out, self._counts)
+            return (
+                self.params,
+                tuple(self.adapters.b_full),
+                tuple(self.adapters.projs),
+                jnp.asarray(self._slot_tenant),
+                state,
+                self._tok,
+                self._out,
+                self._counts,
+                self._key,
+                step,
+            )
+        return (
+            self.params,
+            state,
+            self._tok,
+            self._out,
+            self._counts,
+            self._key,
+            step,
+        )
 
     def decode_jaxpr(self):
-        """Closed jaxpr of the batched decode step (lazy-merge assertion)."""
-        state = self.state._replace(page_table=jnp.asarray(self._pt),
-                                    lengths=jnp.asarray(self._len))
+        """Closed jaxpr of the batched decode step (lazy-merge and
+        no-host-callback assertions)."""
+        state = self.state._replace(
+            page_table=jnp.asarray(self._pt), lengths=jnp.asarray(self._len)
+        )
         args = self._decode_args(state)
         if self.adapters is not None:
             layout = self.adapters.layout
 
-            def raw(params, b_fulls, projs, tenants, state, tok, out, cnt):
-                packed = batched_pack_tree(params, layout, b_fulls, projs,
-                                           tenants)
-                return self._decode_core(packed, state, tok, out, cnt)
+            def raw(
+                params, b_fulls, projs, tenants, state, tok, out, cnt,
+                key, step,
+            ):
+                packed = batched_pack_tree(
+                    params, layout, b_fulls, projs, tenants
+                )
+                return self._decode_core(
+                    packed, state, tok, out, cnt, key, step
+                )
+
         else:
-            def raw(params, state, tok, out, cnt):
-                return self._decode_core(params, state, tok, out, cnt)
+
+            def raw(params, state, tok, out, cnt, key, step):
+                return self._decode_core(
+                    params, state, tok, out, cnt, key, step
+                )
+
         return jax.make_jaxpr(raw)(*args)
 
     def _get_prefill(self, s_total: int, n_pages: int, prefix: int):
@@ -212,49 +417,72 @@ class Engine:
                 # (L, 1, cap, H, D) -> (L, nP, page, H, D) -> arena pages
                 l_ = cache.shape[0]
                 blocks = cache[:, 0].reshape(
-                    (l_, n_pages, self.ecfg.page_size) + cache.shape[3:])
+                    (l_, n_pages, self.ecfg.page_size) + cache.shape[3:]
+                )
                 return arena.at[:, pages].set(blocks.astype(arena.dtype))
 
             new = state
             if tmp.kv is not None:
-                new = new._replace(kv_k=scatter(new.kv_k, tmp.kv.k),
-                                   kv_v=scatter(new.kv_v, tmp.kv.v))
+                new = new._replace(
+                    kv_k=scatter(new.kv_k, tmp.kv.k),
+                    kv_v=scatter(new.kv_v, tmp.kv.v),
+                )
             if tmp.ssm is not None:
-                new = new._replace(ssm=new.ssm._replace(
-                    ssm=new.ssm.ssm.at[:, slot].set(
-                        tmp.ssm.ssm[:, 0].astype(new.ssm.ssm.dtype)),
-                    conv=new.ssm.conv.at[:, slot].set(
-                        tmp.ssm.conv[:, 0].astype(new.ssm.conv.dtype))))
+                new = new._replace(
+                    ssm=new.ssm._replace(
+                        ssm=new.ssm.ssm.at[:, slot].set(
+                            tmp.ssm.ssm[:, 0].astype(new.ssm.ssm.dtype)
+                        ),
+                        conv=new.ssm.conv.at[:, slot].set(
+                            tmp.ssm.conv[:, 0].astype(new.ssm.conv.dtype)
+                        ),
+                    )
+                )
             if tmp.shared_kv is not None:
                 new = new._replace(
                     shared_k=scatter(new.shared_k, tmp.shared_kv.k),
-                    shared_v=scatter(new.shared_v, tmp.shared_kv.v))
+                    shared_v=scatter(new.shared_v, tmp.shared_kv.v),
+                )
             return nxt, new
 
         jitted = jax.jit(fn, donate_argnums=(3,))
         self._prefill_cache[key] = jitted
         return jitted
 
-    # -- host-side bookkeeping --------------------------------------------
+    # -- host-side bookkeeping ---------------------------------------------
 
     def submit(self, req: Request) -> None:
         if req.max_new > self.ecfg.max_out:
             raise ValueError(
                 f"request {req.rid!r}: max_new={req.max_new} exceeds the "
-                f"engine's max_out={self.ecfg.max_out}")
+                f"engine's max_out={self.ecfg.max_out}"
+            )
         prefix = 0 if req.extra_embeds is None else req.extra_embeds.shape[1]
         if len(req.prompt) + prefix + req.max_new - 1 > self.ecfg.max_len:
             raise ValueError(
                 f"request {req.rid!r}: prompt+prefix+max_new "
                 f"{len(req.prompt) + prefix + req.max_new} exceeds "
-                f"max_len={self.ecfg.max_len}")
+                f"max_len={self.ecfg.max_len}"
+            )
         if self.adapters is not None:
             if req.tenant is None:
                 raise ValueError(
                     f"request {req.rid!r}: engine has an adapter store — "
-                    f"requests must name a tenant")
+                    f"requests must name a tenant"
+                )
             if req.tenant not in self.adapters._tenants:
                 raise KeyError(f"unknown tenant {req.tenant!r}")
+        if req.tenant is not None and req.tenant in self._disabled:
+            raise TenantQuarantinedError(
+                f"request {req.rid!r}: tenant {req.tenant!r} is disabled "
+                f"after {self._strikes.get(req.tenant, 0)} decode faults"
+            )
+        if 0 < self.ecfg.max_queue <= len(self._queue):
+            raise EngineBusy(
+                f"admission queue is full ({self.ecfg.max_queue} "
+                f"requests); resubmit {req.rid!r} later"
+            )
+        req._born = self._step_count
         self._queue.append(req)
 
     def _free_slot(self) -> Optional[int]:
@@ -278,18 +506,92 @@ class Engine:
         self._slot_tenant[slot] = 0
         self._slots[slot] = None
 
+    def _finish(self, slot: int, reason: str) -> None:
+        meta = self._slots[slot]
+        row = self._fetch_row(slot)
+        prior = self._partial.pop(meta["rid"], None)
+        if prior is not None:
+            row = np.concatenate([prior, row])
+        self._outputs[meta["rid"]] = row
+        self.reasons[meta["rid"]] = reason
+        self._release(slot)
+
+    def _quarantine(self, slot: int) -> None:
+        """Row fault: fail the request, strike the tenant, free the slot.
+
+        Only the offending row is touched — co-tenants' device state was
+        never contaminated (masked write-back), so they keep decoding
+        bit-identically."""
+        meta = self._slots[slot]
+        rid, tenant = meta["rid"], meta["tenant"]
+        self.errors[rid] = TenantQuarantinedError(
+            f"request {rid!r}: decode row {slot} produced non-finite or "
+            f"collapsed logits (tenant {tenant!r}); row quarantined"
+        )
+        self.reasons[rid] = "quarantined"
+        self._partial.pop(rid, None)
+        self._release(slot)
+        if tenant is not None:
+            self._strikes[tenant] = self._strikes.get(tenant, 0) + 1
+            if self._strikes[tenant] >= self.ecfg.max_strikes:
+                self._disabled.add(tenant)
+
     def _evict_finished(self) -> None:
+        """The eviction boundary: done, capped, expired (TTL / deadline
+        storm) and disabled-tenant slots leave the batch here."""
+        storm = chaos.deadline_storm(self._step_count)
         for slot in self._active_slots():
             meta = self._slots[slot]
+            tenant = meta["tenant"]
+            if tenant is not None and tenant in self._disabled:
+                rid = meta["rid"]
+                self.errors[rid] = TenantQuarantinedError(
+                    f"request {rid!r}: tenant {tenant!r} was disabled "
+                    f"while this request was in flight"
+                )
+                self.reasons[rid] = "quarantined"
+                self._partial.pop(rid, None)
+                self._release(slot)
+                continue
             done = meta["generated"] >= meta["max_new"]
             capped = int(self._len[slot]) >= self.ecfg.max_len
-            if done or capped:
-                row = self._fetch_row(slot)
-                prior = self._partial.pop(meta["rid"], None)
-                if prior is not None:
-                    row = np.concatenate([prior, row])
-                self._outputs[meta["rid"]] = row
-                self._release(slot)
+            ttl = meta.get("ttl")
+            expired = ttl is not None and (
+                storm or self._step_count - meta["born"] >= ttl
+            )
+            if done or capped or expired:
+                self._finish(
+                    slot, "deadline" if expired and not done else "completed"
+                )
+
+    def _expire_queued(self) -> None:
+        """Deadlines and quarantines apply to QUEUED requests too — an
+        expired request must not consume prefill compute it can no
+        longer use."""
+        storm = chaos.deadline_storm(self._step_count)
+        keep: deque = deque()
+        while self._queue:
+            req = self._queue.popleft()
+            if req.tenant is not None and req.tenant in self._disabled:
+                self.errors[req.rid] = TenantQuarantinedError(
+                    f"request {req.rid!r}: tenant {req.tenant!r} is "
+                    f"disabled"
+                )
+                self.reasons[req.rid] = "quarantined"
+                self._partial.pop(req.rid, None)
+                continue
+            expired = req.ttl is not None and (
+                storm or self._step_count - req._born >= req.ttl
+            )
+            if expired:
+                prior = self._partial.pop(req.rid, None)
+                self._outputs[req.rid] = (
+                    prior if prior is not None else np.zeros((0,), np.int32)
+                )
+                self.reasons[req.rid] = "deadline"
+                continue
+            keep.append(req)
+        self._queue = keep
 
     def _preempt(self, slot: int) -> None:
         meta = self._slots[slot]
@@ -299,15 +601,25 @@ class Engine:
         if meta["generated"] >= meta["max_new"]:
             # already done — finishing beats recomputing
             self._outputs[meta["rid"]] = full
+            self.reasons[meta["rid"]] = "completed"
             self._release(slot)
             return
         self._partial[meta["rid"]] = full
         # recompute-on-readmit: the prompt grows by what this residency
         # generated, the remaining budget shrinks by the same amount
-        req = Request(meta["rid"], np.concatenate([meta["prompt"], row]),
-                      meta["max_new"] - meta["generated"],
-                      tenant=meta["tenant"],
-                      extra_embeds=meta["extra_embeds"])
+        req = Request(
+            meta["rid"],
+            np.concatenate([meta["prompt"], row]),
+            meta["max_new"] - meta["generated"],
+            tenant=meta["tenant"],
+            extra_embeds=meta["extra_embeds"],
+            ttl=meta.get("ttl"),
+        )
+        # seniority and deadline survive preemption: keeping the original
+        # admission seq makes readmission starvation-free (the youngest-
+        # victim rule can never keep re-picking a long-lived sequence)
+        req._seq = meta["seq"]
+        req._born = meta["born"]
         self._release(slot)
         self._queue.appendleft(req)
 
@@ -317,32 +629,55 @@ class Engine:
             slot = self._free_slot()
             if slot is None:
                 return
-            prefix = 0 if req.extra_embeds is None \
-                else req.extra_embeds.shape[1]
+            prefix = (
+                0 if req.extra_embeds is None else req.extra_embeds.shape[1]
+            )
             s_total = len(req.prompt) + prefix
             need = self.pool.pages_for(s_total)
             pages = self.pool.alloc(need)
             if pages is None:
-                if not self._active_slots() and \
-                        self.pool.available == self.num_pages:
+                if (
+                    not self._active_slots()
+                    and not self._chaos_pages
+                    and self.pool.available == self.num_pages
+                ):
                     raise RuntimeError(
                         f"request {req.rid!r} needs {need} pages but the "
                         f"pool only has {self.num_pages}; raise "
-                        f"REPRO_SERVE_NUM_PAGES")
+                        f"REPRO_SERVE_NUM_PAGES"
+                    )
                 return  # backpressure: wait for evictions
             self._queue.popleft()
-            tenant_idx = 0
-            packed = self.params
-            if self.adapters is not None:
-                tenant_idx = self.adapters.tenant_index(req.tenant)
-                packed = self.adapters.lrpack_tree(self.params, req.tenant)
-            fn = self._get_prefill(s_total, need, prefix)
-            extra = None if req.extra_embeds is None \
-                else jnp.asarray(req.extra_embeds)
-            nxt, self.state = fn(
-                packed, jnp.asarray(req.prompt[None, :]), extra, self.state,
-                jnp.asarray(np.asarray(pages, np.int32)),
-                jnp.asarray(slot, jnp.int32))
+            try:
+                tenant_idx = 0
+                packed = self.params
+                if self.adapters is not None:
+                    tenant_idx = self.adapters.tenant_index(req.tenant)
+                    packed = self.adapters.lrpack_tree(
+                        self.params, req.tenant
+                    )
+                fn = self._get_prefill(s_total, need, prefix)
+                extra = (
+                    None
+                    if req.extra_embeds is None
+                    else jnp.asarray(req.extra_embeds)
+                )
+                nxt, self.state = fn(
+                    packed,
+                    jnp.asarray(req.prompt[None, :]),
+                    extra,
+                    self.state,
+                    jnp.asarray(np.asarray(pages, np.int32)),
+                    jnp.asarray(slot, jnp.int32),
+                )
+            except Exception:
+                # leak-proof admission: a failed prefill returns the
+                # whole chain before the error propagates
+                self.pool.release(pages)
+                raise
+            if req._seq is None:
+                req._seq = self._admit_seq
+                self._admit_seq += 1
             self._pt[slot, :] = -1
             self._pt[slot, :need] = pages
             self._len[slot] = s_total
@@ -351,16 +686,22 @@ class Engine:
             self._out = self._out.at[slot].set(0).at[slot, 0].set(nxt)
             self._counts = self._counts.at[slot].set(1)
             self._slots[slot] = {
-                "rid": req.rid, "prompt": req.prompt,
-                "max_new": req.max_new, "generated": 1,
-                "tenant": req.tenant, "extra_embeds": req.extra_embeds,
-                "pages": list(pages), "seq": self._admit_seq,
+                "rid": req.rid,
+                "prompt": req.prompt,
+                "max_new": req.max_new,
+                "generated": 1,
+                "tenant": req.tenant,
+                "extra_embeds": req.extra_embeds,
+                "pages": list(pages),
+                "seq": req._seq,
+                "born": req._born,
+                "ttl": req.ttl,
             }
-            self._admit_seq += 1
 
     def _ensure_pages(self) -> None:
-        for slot in sorted(self._active_slots(),
-                           key=lambda s: self._slots[s]["seq"]):
+        for slot in sorted(
+            self._active_slots(), key=lambda s: self._slots[s]["seq"]
+        ):
             meta = self._slots[slot]
             if meta is None:
                 continue
@@ -373,45 +714,323 @@ class Engine:
             got = self.pool.alloc(1)
             while got is None:
                 victims = [s for s in self._active_slots() if s != slot]
-                if not victims:
-                    raise RuntimeError(
-                        "page pool exhausted with a single active "
-                        "sequence; raise REPRO_SERVE_NUM_PAGES")
-                victim = max(victims, key=lambda s: self._slots[s]["seq"])
-                self._preempt(victim)
-                got = self.pool.alloc(1)
+                if victims:
+                    victim = max(
+                        victims, key=lambda s: self._slots[s]["seq"]
+                    )
+                    self._preempt(victim)
+                    got = self.pool.alloc(1)
+                    continue
+                if self._chaos_pages:
+                    # a pool-exhaustion spike must degrade to
+                    # preemption, never to a crash of the last sequence
+                    self.pool.release(self._chaos_pages)
+                    self._chaos_pages = []
+                    got = self.pool.alloc(1)
+                    continue
+                raise RuntimeError(
+                    "page pool exhausted with a single active "
+                    "sequence; raise REPRO_SERVE_NUM_PAGES"
+                )
             self._pt[slot, pidx] = got[0]
             meta["pages"].append(got[0])
 
-    # -- the engine loop --------------------------------------------------
+    def _chaos_pool_tick(self) -> None:
+        """Pool-exhaustion chaos: hold every free page for one step."""
+        if self._chaos_pages:
+            self.pool.release(self._chaos_pages)
+            self._chaos_pages = []
+        if chaos.pool_spike(self._step_count) and self.pool.available:
+            got = self.pool.alloc(self.pool.available)
+            if got is not None:
+                self._chaos_pages = list(got)
+
+    # -- the engine loop ---------------------------------------------------
 
     def step(self) -> bool:
-        """One engine iteration. Returns True if any work remains."""
+        """One engine iteration.  Returns True if any work remains."""
+        chaos.maybe_sigterm(self._step_count)
+        self._chaos_pool_tick()
         self._evict_finished()
+        self._expire_queued()
         self._admit()
         active = self._active_slots()
+        if not active and self._queue and self._chaos_pages:
+            # everything is parked behind a chaos spike: give the pages
+            # back and admit rather than starve
+            self.pool.release(self._chaos_pages)
+            self._chaos_pages = []
+            self._admit()
+            active = self._active_slots()
         if not active:
             if self._queue:
                 raise RuntimeError(
                     "queued requests cannot be admitted (page pool or "
-                    "batch too small) and nothing is running")
+                    "batch too small) and nothing is running"
+                )
             return False
         self._ensure_pages()
         # _ensure_pages may have preempted; re-check who is still active
         active = self._active_slots()
-        state = self.state._replace(page_table=jnp.asarray(self._pt),
-                                    lengths=jnp.asarray(self._len))
+        state = self.state._replace(
+            page_table=jnp.asarray(self._pt), lengths=jnp.asarray(self._len)
+        )
         res = self._decode_jit(*self._decode_args(state))
-        self.state, self._tok, self._out, self._counts = res
+        self.state, self._tok, self._out, self._counts, self._key, fault = (
+            res
+        )
+        faulted: List[int] = []
+        if self.ecfg.guard:
+            # the ONE fetched observable per step (PR 6 philosophy)
+            host_fault = np.asarray(fault)
+            faulted = [s for s in active if host_fault[s] > 0.0]
         for slot in active:
+            if slot in faulted:
+                continue
             self._slots[slot]["generated"] += 1
             self._len[slot] += 1
+        for slot in faulted:
+            self._quarantine(slot)
+        self._step_count += 1
         return True
 
     def run(self) -> Dict:
-        """Drain the queue; returns {rid: np.int32 generated tokens}."""
-        while self._queue or self._active_slots():
-            self.step()
+        """Drain the queue; returns {rid: np.int32 generated tokens}.
+
+        Requests that fail (quarantine) surface in ``self.errors``;
+        ``self.reasons`` records why each finished request left the
+        engine.  SIGTERM/SIGINT during the loop drains: the current step
+        completes, the engine snapshots to ``snapshot_dir`` (when set)
+        and the completed outputs are returned."""
+        self._install_handlers()
+        try:
+            while self._queue or self._active_slots():
+                self.step()
+                if self._draining:
+                    if self.snapshot_dir is not None:
+                        self.snapshot(self.snapshot_dir)
+                    break
+        finally:
+            self._restore_handlers()
         self._evict_finished()
         out, self._outputs = self._outputs, {}
         return out
+
+    # -- drain / snapshot / warm restart -----------------------------------
+
+    def _on_signal(self, signum, frame) -> None:
+        self._draining = True
+
+    def _install_handlers(self) -> None:
+        if self._prev_handlers is not None:
+            return
+        try:
+            self._prev_handlers = {
+                s: signal.signal(s, self._on_signal)
+                for s in (signal.SIGTERM, signal.SIGINT)
+            }
+        except ValueError:  # not the main thread — drain flag only
+            self._prev_handlers = None
+
+    def _restore_handlers(self) -> None:
+        if self._prev_handlers:
+            for s, h in self._prev_handlers.items():
+                signal.signal(s, h)
+        self._prev_handlers = None
+
+    def _snapshot_tree(self) -> dict:
+        tree = {
+            "arena": self.state._replace(
+                page_table=jnp.asarray(self._pt),
+                lengths=jnp.asarray(self._len),
+            ),
+            "tok": self._tok,
+            "out": self._out,
+            "counts": self._counts,
+            "key": self._key,
+        }
+        if self.adapters is not None:
+            tree["adapter_b"] = tuple(self.adapters.b_full)
+            tree["adapter_v"] = tuple(self.adapters.projs)
+        return tree
+
+    @staticmethod
+    def _embeds_json(e):
+        if e is None:
+            return None
+        arr = np.asarray(e, np.float32)
+        return {"shape": list(arr.shape), "data": arr.ravel().tolist()}
+
+    @staticmethod
+    def _embeds_from_json(d):
+        if d is None:
+            return None
+        return np.asarray(d["data"], np.float32).reshape(d["shape"])
+
+    def _req_json(self, req: Request) -> dict:
+        return {
+            "rid": req.rid,
+            "prompt": [int(t) for t in req.prompt],
+            "max_new": req.max_new,
+            "tenant": req.tenant,
+            "extra_embeds": self._embeds_json(req.extra_embeds),
+            "ttl": req.ttl,
+            "seq": req._seq,
+            "born": req._born,
+        }
+
+    def _snapshot_extra(self) -> dict:
+        slots = []
+        for meta in self._slots:
+            if meta is None:
+                slots.append(None)
+                continue
+            m = dict(meta)
+            m["prompt"] = [int(t) for t in meta["prompt"]]
+            m["extra_embeds"] = self._embeds_json(meta["extra_embeds"])
+            slots.append(m)
+        return {
+            "engine_cfg": dataclasses.asdict(self.ecfg),
+            "arch": self.cfg.name,
+            "step_count": self._step_count,
+            "admit_seq": self._admit_seq,
+            "pt": self._pt.tolist(),
+            "len": self._len.tolist(),
+            "slot_tenant": self._slot_tenant.tolist(),
+            "slots": slots,
+            "queue": [self._req_json(r) for r in self._queue],
+            "outputs": {
+                str(k): np.asarray(v).tolist()
+                for k, v in self._outputs.items()
+            },
+            "partial": {
+                str(k): np.asarray(v).tolist()
+                for k, v in self._partial.items()
+            },
+            "reasons": {str(k): v for k, v in self.reasons.items()},
+            "errors": {str(k): str(v) for k, v in self.errors.items()},
+            "strikes": dict(self._strikes),
+            "disabled": sorted(self._disabled),
+            "tenants": (
+                dict(self.adapters._tenants)
+                if self.adapters is not None
+                else None
+            ),
+        }
+
+    def snapshot(self, workdir: str, *, keep: int = 3) -> int:
+        """Serialize the WHOLE engine through the hardened checkpoint
+        layer (fsync'd atomic publish, CRC manifest, torn-write
+        quarantine on restore): page arenas, page tables, slot map,
+        output rings, sampling RNG, adapter buffers and all host
+        bookkeeping.  Request ids must be strings (they key the JSON
+        manifest).  Returns the snapshot step."""
+        checkpoint.save(
+            workdir,
+            self._step_count,
+            self._snapshot_tree(),
+            keep=keep,
+            extra={"serve": self._snapshot_extra()},
+        )
+        return self._step_count
+
+    @classmethod
+    def restore(
+        cls,
+        workdir: str,
+        params,
+        cfg,
+        *,
+        adapters: Optional[AdapterStore] = None,
+        step: Optional[int] = None,
+        snapshot_dir: Optional[str] = None,
+    ) -> "Engine":
+        """Warm-restart an engine from :meth:`snapshot`.
+
+        In-flight sequences resume mid-decode with bit-identical
+        outputs; queued requests, partials, strikes and disabled
+        tenants survive.  ``adapters`` must be a store built for the
+        same config/rank — its buffers and tenant map are overwritten
+        from the snapshot."""
+        if step is None:
+            step = checkpoint.latest_step(workdir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no engine snapshot found in {workdir!r}"
+                )
+        manifest = checkpoint.read_manifest(workdir, step)
+        ex = (manifest.get("extra") or {}).get("serve")
+        if ex is None:
+            raise IOError(
+                f"checkpoint at step {step} in {workdir!r} is not an "
+                f"engine snapshot"
+            )
+        if ex.get("arch") != cfg.name:
+            raise ValueError(
+                f"snapshot arch {ex.get('arch')!r} != engine config "
+                f"{cfg.name!r}"
+            )
+        if (ex.get("tenants") is not None) != (adapters is not None):
+            raise ValueError(
+                "snapshot and restore disagree about the adapter store"
+            )
+        ecfg = EngineConfig(**ex["engine_cfg"])
+        eng = cls(
+            params,
+            cfg,
+            adapters=adapters,
+            engine_cfg=ecfg,
+            snapshot_dir=snapshot_dir,
+        )
+        tree, _ = checkpoint.restore(workdir, step, eng._snapshot_tree())
+        eng.state = tree["arena"]
+        eng._tok = tree["tok"]
+        eng._out = tree["out"]
+        eng._counts = tree["counts"]
+        eng._key = tree["key"]
+        if adapters is not None:
+            adapters.b_full = list(tree["adapter_b"])
+            adapters.projs = list(tree["adapter_v"])
+            adapters._tenants = dict(ex["tenants"])
+            adapters._proj_loaded = True
+        eng._pt = np.asarray(ex["pt"], np.int32)
+        eng._len = np.asarray(ex["len"], np.int32)
+        eng._slot_tenant = np.asarray(ex["slot_tenant"], np.int32)
+        eng._step_count = int(ex["step_count"])
+        eng._admit_seq = int(ex["admit_seq"])
+        eng.reasons = dict(ex["reasons"])
+        eng._strikes = dict(ex["strikes"])
+        eng._disabled = set(ex["disabled"])
+        eng._outputs = {
+            k: np.asarray(v, np.int32) for k, v in ex["outputs"].items()
+        }
+        eng._partial = {
+            k: np.asarray(v, np.int32) for k, v in ex["partial"].items()
+        }
+        eng.errors = {
+            k: TenantQuarantinedError(v) for k, v in ex["errors"].items()
+        }
+        held: List[int] = []
+        for slot, m in enumerate(ex["slots"]):
+            if m is None:
+                continue
+            meta = dict(m)
+            meta["prompt"] = np.asarray(m["prompt"], np.int32)
+            meta["extra_embeds"] = cls._embeds_from_json(m["extra_embeds"])
+            meta["pages"] = [int(p) for p in m["pages"]]
+            eng._slots[slot] = meta
+            held.extend(meta["pages"])
+        for r in ex["queue"]:
+            req = Request(
+                r["rid"],
+                np.asarray(r["prompt"], np.int32),
+                r["max_new"],
+                tenant=r["tenant"],
+                extra_embeds=cls._embeds_from_json(r["extra_embeds"]),
+                ttl=r["ttl"],
+            )
+            req._seq = r["seq"]
+            req._born = r["born"]
+            eng._queue.append(req)
+        eng.pool.reserve(held)
+        return eng

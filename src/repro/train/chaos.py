@@ -21,6 +21,24 @@ preemptions:
     given trainer step (maintenance-event draining), exercising the
     actual signal-handler path.
 
+Serving fault sites (PR 10) ride the same hook so one ``REPRO_CHAOS``
+spec drives both loops:
+
+  * ``logit_rows`` — poison one decode row's logits (NaN, or zero for an
+    all-mass-collapse) at a given engine step.  Traced exactly like
+    ``grad_nan_steps``: the engine captures the hook at trace time and
+    weaves a ``jnp.where(step == k, poison, 1)`` multiplier into the
+    decode jit, so the per-row health guard sees what a real bf16 adapter
+    overflow would produce — no retrace, no callback.
+  * ``raise_in_swap`` — crash the two-phase adapter hot-swap at a labeled
+    point (:data:`SWAP_SITES`): a torn swap that must never leave the
+    store half-updated.
+  * ``pool_spike_steps`` — grab every free page at the start of an engine
+    step (released next step): a page-pool exhaustion spike that forces
+    the preemption path.
+  * ``deadline_storm_steps`` — force-expire every TTL'd request at one
+    eviction boundary: a deadline storm that must drain, not deadlock.
+
 The hook is module-global and monkeypatchable: ``install(ChaosHook(...))``
 / ``uninstall()``, or the :func:`injected` context manager.  The
 ``REPRO_CHAOS`` environment variable installs a hook at import time for
@@ -45,6 +63,12 @@ SAVE_SITES = (
     "save:post_rename",   # published, GC not yet run
 )
 
+SWAP_SITES = (
+    "swap:pre_stage",     # validated, staging buffers not yet built
+    "swap:pre_commit",    # staged, atomic flip not yet issued
+    "swap:post_commit",   # flipped, tenant map updated
+)
+
 
 class ChaosError(RuntimeError):
     """The injected mid-save crash (stands in for SIGKILL/power loss)."""
@@ -61,6 +85,11 @@ class ChaosHook:
     raise_in_save: Optional[str] = None    # one of SAVE_SITES
     sigterm_at_step: Optional[int] = None  # trainer step to SIGTERM at
     seed: int = 0                          # reserved for randomized modes
+    # serving faults: ((engine_step, decode_row, 'nan'|'zero'), ...)
+    logit_rows: Tuple[Tuple[int, int, str], ...] = ()
+    raise_in_swap: Optional[str] = None    # one of SWAP_SITES
+    pool_spike_steps: Tuple[int, ...] = ()  # engine steps to drain the pool
+    deadline_storm_steps: Tuple[int, ...] = ()  # boundaries to storm
 
     def poison(self) -> float:
         return float("inf") if self.grad_mode == "inf" else float("nan")
@@ -100,9 +129,13 @@ def from_env(spec: Optional[str] = None) -> Optional[ChaosHook]:
     """Parse a ``REPRO_CHAOS`` spec: ``;``-separated ``kind@args`` terms.
 
     ``nan@3,4`` / ``inf@7`` (poison grads), ``spike@5`` (finite loss
-    spike), ``truncate@128`` (byte offset), ``raise@save:pre_rename``,
-    ``sigterm@9``.  Unknown terms raise — a typo'd chaos spec silently
-    doing nothing would defeat the whole point of the leg.
+    spike), ``truncate@128`` (byte offset), ``raise@save:pre_rename`` /
+    ``raise@swap:pre_commit``, ``sigterm@9``.  Serving terms:
+    ``rownan@3:1`` / ``rowzero@2:0,5:1`` (poison row R's logits at engine
+    step S, NaN or collapse-to-constant), ``pools@4,7`` (pool-exhaustion
+    spikes), ``storm@5`` (deadline storm).  Unknown terms raise — a
+    typo'd chaos spec silently doing nothing would defeat the whole
+    point of the leg.
     """
     spec = os.environ.get("REPRO_CHAOS", "") if spec is None else spec
     spec = spec.strip()
@@ -122,12 +155,28 @@ def from_env(spec: Optional[str] = None) -> Optional[ChaosHook]:
         elif kind == "truncate":
             kw["truncate_npz_at"] = int(arg)
         elif kind == "raise":
-            if arg not in SAVE_SITES:
-                raise ValueError(f"REPRO_CHAOS raise site {arg!r} unknown; "
-                                 f"sites: {', '.join(SAVE_SITES)}")
-            kw["raise_in_save"] = arg
+            if arg in SAVE_SITES:
+                kw["raise_in_save"] = arg
+            elif arg in SWAP_SITES:
+                kw["raise_in_swap"] = arg
+            else:
+                raise ValueError(
+                    f"REPRO_CHAOS raise site {arg!r} unknown; sites: "
+                    f"{', '.join(SAVE_SITES + SWAP_SITES)}")
         elif kind == "sigterm":
             kw["sigterm_at_step"] = int(arg)
+        elif kind in ("rownan", "rowzero"):
+            mode = "nan" if kind == "rownan" else "zero"
+            rows = list(kw.get("logit_rows", ()))
+            for pair in arg.split(","):
+                s, _, r = pair.partition(":")
+                rows.append((int(s), int(r), mode))
+            kw["logit_rows"] = tuple(rows)
+        elif kind == "pools":
+            kw["pool_spike_steps"] = tuple(int(s) for s in arg.split(","))
+        elif kind == "storm":
+            kw["deadline_storm_steps"] = tuple(
+                int(s) for s in arg.split(","))
         else:
             raise ValueError(f"REPRO_CHAOS term {term!r} not understood")
     return ChaosHook(**kw)
@@ -136,9 +185,21 @@ def from_env(spec: Optional[str] = None) -> Optional[ChaosHook]:
 # -- host-side injection points (all no-ops without a hook) -----------------
 
 def maybe_raise(site: str) -> None:
-    """Crash point inside ``checkpoint.save`` (``site`` in SAVE_SITES)."""
-    if _HOOK is not None and _HOOK.raise_in_save == site:
+    """Crash point inside ``checkpoint.save`` (SAVE_SITES) or the
+    two-phase adapter swap (SWAP_SITES)."""
+    if _HOOK is not None and site in (_HOOK.raise_in_save,
+                                      _HOOK.raise_in_swap):
         raise ChaosError(f"chaos: injected crash at {site}")
+
+
+def pool_spike(step: int) -> bool:
+    """True when the engine must drain its page pool at ``step``."""
+    return _HOOK is not None and step in _HOOK.pool_spike_steps
+
+
+def deadline_storm(step: int) -> bool:
+    """True when every TTL'd request expires at this eviction boundary."""
+    return _HOOK is not None and step in _HOOK.deadline_storm_steps
 
 
 def maybe_truncate(path: str) -> None:

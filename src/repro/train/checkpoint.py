@@ -448,6 +448,18 @@ def latest_step(workdir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(workdir: str, step: int) -> dict:
+    """The manifest of a published checkpoint, without touching arrays.
+
+    Restore-side bootstrapping (e.g. the serving engine rebuilding its
+    ``EngineConfig`` from a snapshot's ``extra``) needs the manifest
+    *before* it can construct a restore template; this is that read.
+    """
+    path = os.path.join(workdir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore(workdir: str, step: int, template: Any,
             shardings: Any = None, expect_method: Optional[str] = None) -> Any:
     """Fill ``template``'s treedef with saved leaves (CRC-verified).

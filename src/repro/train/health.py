@@ -97,6 +97,21 @@ def _poison_tree(tree, factor: Array):
     return jax.tree.map(f, tree)
 
 
+def logits_row_ok(rows: Array) -> Array:
+    """Per-row decode-logit health: ``(batch,)`` bool, True = servable.
+
+    A row fails when any logit is non-finite (bf16 adapter overflow) or
+    when the distribution has collapsed to a constant (zero spread — all
+    mass nowhere, the washed-out-adapter signature).  Pass only the real
+    vocab lanes: padded lanes carry a large negative fill that would hide
+    a collapse.  Traced — used inside the serving decode jit, mirroring
+    :func:`guard_inner_step`'s select semantics.
+    """
+    finite = jnp.all(jnp.isfinite(rows), axis=-1)
+    spread = (jnp.max(rows, axis=-1) - jnp.min(rows, axis=-1)) > 0
+    return finite & spread
+
+
 def guard_inner_step(step_fn: Callable, tcfg) -> Callable:
     """Wrap a Method inner step with the traced health guard.
 
